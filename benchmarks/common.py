@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_it(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kw) -> float:
+    """Median wall seconds per call (block_until_ready-aware)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """name,us_per_call,derived CSV row (the harness contract)."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

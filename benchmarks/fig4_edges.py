@@ -1,0 +1,42 @@
+"""Paper Figure 4 analog: GEE runtime vs. edge count on Erdős–Rényi
+graphs — the linearity claim (C4).  We fit runtime = a*s + b and report
+R^2 of the linear fit plus the per-edge cost stability."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_it
+from repro.core import gee as G
+from repro.graph.edges import make_labels
+from repro.graph.generators import erdos_renyi
+
+SIZES = [250_000, 500_000, 1_000_000, 2_000_000, 4_000_000]
+K = 50
+N = 200_000
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    Y = make_labels(N, K, 0.10, rng)
+    Yj = jnp.asarray(Y)
+    xs, ts = [], []
+    for s in SIZES:
+        g = erdos_renyi(N, s, seed=s, weighted=True)
+        uj, vj, wj = map(jnp.asarray, (g.u, g.v, g.w))
+        t = time_it(lambda: G.gee(uj, vj, wj, Yj, K=K, n=N),
+                    warmup=1, iters=3)
+        xs.append(s)
+        ts.append(t)
+        emit(f"fig4/edges{s}", t, f"ns_per_edge={t / s * 1e9:.2f}")
+    A = np.vstack([np.asarray(xs, float), np.ones(len(xs))]).T
+    coef, res, *_ = np.linalg.lstsq(A, np.asarray(ts), rcond=None)
+    pred = A @ coef
+    ss_tot = np.sum((np.asarray(ts) - np.mean(ts)) ** 2)
+    r2 = 1.0 - float(np.sum((pred - ts) ** 2)) / max(ss_tot, 1e-18)
+    emit("fig4/linear_fit", 0.0,
+         f"C4;r2={r2:.4f};slope_ns_per_edge={coef[0] * 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    run()

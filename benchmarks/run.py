@@ -1,0 +1,55 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig4,...]
+
+Suites:
+    table1   — paper Table I analog (python/numpy/XLA GEE runtimes)
+    fig3     — strong scaling (subprocess device sweep)
+    fig4     — Erdős–Rényi edge-count linearity
+    kernels  — kernel-path microbenches
+    roofline — per-cell roofline terms from dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = ("table1", "fig4", "kernels", "fig3", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+    chosen = args.only.split(",") if args.only else list(SUITES)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for suite in chosen:
+        try:
+            if suite == "table1":
+                from benchmarks.table1_runtimes import run
+            elif suite == "fig3":
+                from benchmarks.fig3_scaling import run
+            elif suite == "fig4":
+                from benchmarks.fig4_edges import run
+            elif suite == "kernels":
+                from benchmarks.kernels_bench import run
+            elif suite == "roofline":
+                from benchmarks.roofline_report import run
+            else:
+                raise ValueError(f"unknown suite {suite}")
+            run()
+        except Exception:
+            traceback.print_exc()
+            failures.append(suite)
+    if failures:
+        print(f"# FAILED suites: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

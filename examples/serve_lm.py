@@ -1,0 +1,29 @@
+"""Batched serving example: prefill a mixed batch of prompts, decode
+greedily with the shared donated KV cache (the decode_32k dry-run cells
+run exactly this step function at production shapes).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main        # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--reduced",
+                "--batch", str(args.batch),
+                "--prompt-len", str(args.prompt_len),
+                "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

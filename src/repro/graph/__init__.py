@@ -1,0 +1,1 @@
+"""Graph substrate: edge lists, generators, partitioning, IO."""

@@ -1,0 +1,76 @@
+"""Graph data structures: weighted directed edge lists.
+
+The paper's convention: a graph G(n, s) is an edge list E in R^{s x 3}
+(source, destination, weight); undirected graphs are two symmetric
+directed edges; unweighted graphs have unit weights.  Labels
+Y in {0..K}^n with 0 = unknown (paper) are remapped here to
+{-1 = unknown, 0..K-1} for 0-based indexing.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class Graph:
+    """Edge-list graph. u, v: int32 (s,); w: float32 (s,); n nodes."""
+    u: np.ndarray
+    v: np.ndarray
+    w: np.ndarray
+    n: int
+
+    @property
+    def s(self) -> int:
+        return int(self.u.shape[0])
+
+    def validate(self) -> None:
+        assert self.u.shape == self.v.shape == self.w.shape
+        assert self.u.min() >= 0 and self.u.max() < self.n
+        assert self.v.min() >= 0 and self.v.max() < self.n
+
+    def symmetrize(self) -> "Graph":
+        """Undirected -> two symmetric directed edges."""
+        return Graph(np.concatenate([self.u, self.v]),
+                     np.concatenate([self.v, self.u]),
+                     np.concatenate([self.w, self.w]), self.n)
+
+    def degrees(self) -> np.ndarray:
+        """Weighted out+in degree (the Laplacian normalizer)."""
+        d = np.zeros(self.n, np.float64)
+        np.add.at(d, self.u, self.w)
+        np.add.at(d, self.v, self.w)
+        return d.astype(np.float32)
+
+    def permuted(self, rng: np.random.Generator) -> "Graph":
+        """Random edge order (load-balance for static sharding)."""
+        p = rng.permutation(self.s)
+        return Graph(self.u[p], self.v[p], self.w[p], self.n)
+
+    def pad_to(self, s_pad: int) -> "Graph":
+        """Pad with zero-weight self-loops of node 0 (no-op edges)."""
+        extra = s_pad - self.s
+        assert extra >= 0
+        z = np.zeros(extra, self.u.dtype)
+        return Graph(np.concatenate([self.u, z]),
+                     np.concatenate([self.v, z]),
+                     np.concatenate([self.w, np.zeros(extra, np.float32)]),
+                     self.n)
+
+
+def make_labels(n: int, K: int, labeled_frac: float,
+                rng: np.random.Generator,
+                true_labels: Optional[np.ndarray] = None) -> np.ndarray:
+    """Paper setup: labels uniform over [0, K) for `labeled_frac` of nodes
+    chosen uniformly at random; -1 elsewhere.  If true_labels given,
+    reveal those instead of random ones (SBM quality experiments)."""
+    Y = np.full(n, -1, np.int32)
+    m = max(1, int(n * labeled_frac))
+    idx = rng.choice(n, size=m, replace=False)
+    if true_labels is not None:
+        Y[idx] = true_labels[idx]
+    else:
+        Y[idx] = rng.integers(0, K, size=m)
+    return Y

@@ -1,0 +1,51 @@
+"""Synthetic graph generators (paper: Erdős–Rényi scaling study; we add
+SBM for embedding-quality validation and power-law for skew stress)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.edges import Graph
+
+
+def erdos_renyi(n: int, s: int, seed: int = 0, weighted: bool = False
+                ) -> Graph:
+    """G(n, s): s directed edges with uniform random endpoints (the G(n, M)
+    variant used for runtime scaling; self-loops possible, harmless)."""
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, size=s, dtype=np.int32)
+    v = rng.integers(0, n, size=s, dtype=np.int32)
+    w = (rng.random(s, dtype=np.float32) + 0.5 if weighted
+         else np.ones(s, np.float32))
+    return Graph(u, v, w, n)
+
+
+def sbm(n: int, K: int, s: int, p_in: float = 0.9, seed: int = 0
+        ) -> tuple[Graph, np.ndarray]:
+    """Stochastic block model with s expected edges; returns (graph,
+    true_labels).  p_in = probability an edge is intra-community."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, K, size=n, dtype=np.int32)
+    intra = rng.random(s) < p_in
+    u = rng.integers(0, n, size=s, dtype=np.int32)
+    # intra edges: v sampled from u's community; inter: uniform
+    v = rng.integers(0, n, size=s, dtype=np.int32)
+    # resample intra destinations within the same block, by rejection-free
+    # trick: pick a random member of the block via sorted-by-label index
+    order = np.argsort(labels, kind="stable")
+    block_start = np.searchsorted(labels[order], np.arange(K))
+    block_count = np.bincount(labels, minlength=K)
+    lab_u = labels[u]
+    offs = (rng.random(s) * block_count[lab_u]).astype(np.int64)
+    v_intra = order[block_start[lab_u] + offs]
+    v = np.where(intra, v_intra, v).astype(np.int32)
+    return Graph(u, v, np.ones(s, np.float32), n), labels
+
+
+def powerlaw(n: int, s: int, alpha: float = 1.5, seed: int = 0) -> Graph:
+    """Preferential-attachment-ish skewed degree graph (Zipf endpoints)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n + 1, dtype=np.float64) ** (-alpha)
+    p = ranks / ranks.sum()
+    u = rng.choice(n, size=s, p=p).astype(np.int32)
+    v = rng.integers(0, n, size=s, dtype=np.int32)
+    return Graph(u, v, np.ones(s, np.float32), n)

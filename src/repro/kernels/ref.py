@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gee import edge_contributions, make_w
+
+
+def gee_scatter_ref(dst, cls, val, n: int, K: int) -> jnp.ndarray:
+    """Segment-sum oracle for the gee_scatter kernel."""
+    return jnp.zeros((n, K), jnp.float32).at[dst, cls].add(
+        val.astype(jnp.float32))
+
+
+def gee_ref(u, v, w, Y, n: int, K: int) -> jnp.ndarray:
+    Wv = make_w(Y, K)
+    dst, cls, val = edge_contributions(u, v, w.astype(jnp.float32), Y, Wv)
+    return gee_scatter_ref(dst, cls, val, n, K)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """q: (B, H, S, D); k, v: (B, KV, S, D) with KV | H (GQA)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, S, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg,
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)

@@ -1,0 +1,95 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+"""§Perf hillclimbing driver: run tagged optimization variants of the
+three chosen cells and print before/after roofline terms.
+
+The three pairs (selection rationale in EXPERIMENTS.md §Perf):
+  1. qwen1.5-110b x train_4k   — worst memory blow-up (biggest dense)
+  2. grok-1-314b  x train_4k   — most collective-bound
+  3. gee-friendster (ring)     — the paper's own workload
+
+Each variant re-lowers the cell with one change and records the probe
+terms under a tag; compare with
+    PYTHONPATH=src python -m repro.launch.hillclimb --list
+"""
+import argparse
+import json
+
+from repro.launch.dryrun import run_cell, run_gee
+
+VARIANTS = {
+    # --- qwen110 train: memory term ------------------------------------
+    "qwen110-base": dict(kind="cell", arch="qwen1.5-110b",
+                         shape="train_4k", kw={}),
+    "qwen110-tri": dict(kind="cell", arch="qwen1.5-110b", shape="train_4k",
+                        kw=dict(impl="triangular", tag="tri")),
+    "qwen110-accum8": dict(kind="cell", arch="qwen1.5-110b",
+                           shape="train_4k",
+                           kw=dict(accum_steps=8, tag="accum8")),
+    "qwen110-seqshard": dict(kind="cell", arch="qwen1.5-110b",
+                             shape="train_4k",
+                             kw=dict(seq_shard_acts=True, tag="seqshard")),
+    "qwen110-tri-accum8": dict(kind="cell", arch="qwen1.5-110b",
+                               shape="train_4k",
+                               kw=dict(impl="triangular", accum_steps=8,
+                                       tag="tri-accum8")),
+    "qwen110-accum8-seqshard": dict(
+        kind="cell", arch="qwen1.5-110b", shape="train_4k",
+        kw=dict(accum_steps=8, seq_shard_acts=True,
+                tag="accum8-seqshard")),
+    "qwen110-accum16-seqshard": dict(
+        kind="cell", arch="qwen1.5-110b", shape="train_4k",
+        kw=dict(accum_steps=16, seq_shard_acts=True,
+                tag="accum16-seqshard")),
+    # prefill cell where attention flops dominate: triangular matters
+    "qwen110-prefill-base": dict(kind="cell", arch="qwen1.5-110b",
+                                 shape="prefill_32k", kw={}),
+    "qwen110-prefill-tri": dict(kind="cell", arch="qwen1.5-110b",
+                                shape="prefill_32k",
+                                kw=dict(impl="triangular", tag="tri")),
+    "grok-seqshard": dict(kind="cell", arch="grok-1-314b",
+                          shape="train_4k",
+                          kw=dict(seq_shard_acts=True, tag="seqshard")),
+    # --- grok train: collective term ------------------------------------
+    "grok-base": dict(kind="cell", arch="grok-1-314b", shape="train_4k",
+                      kw={}),
+    "grok-tri": dict(kind="cell", arch="grok-1-314b", shape="train_4k",
+                     kw=dict(impl="triangular", tag="tri")),
+    "grok-nofsdp": dict(kind="cell", arch="grok-1-314b", shape="train_4k",
+                        kw=dict(fsdp=False, tag="nofsdp")),
+    "grok-accum8": dict(kind="cell", arch="grok-1-314b", shape="train_4k",
+                        kw=dict(accum_steps=8, tag="accum8")),
+    "grok-int8": dict(kind="cell", arch="grok-1-314b", shape="train_4k",
+                      kw=dict(compress_grads=True, tag="int8")),
+    "grok-tri-accum8": dict(kind="cell", arch="grok-1-314b",
+                            shape="train_4k",
+                            kw=dict(impl="triangular", accum_steps=8,
+                                    tag="tri-accum8")),
+    # --- GEE friendster: the paper's workload ---------------------------
+    "gee-ring": dict(kind="gee", mode="ring"),
+    "gee-a2a": dict(kind="gee", mode="a2a"),
+    "gee-rs": dict(kind="gee", mode="reduce_scatter"),
+    "gee-repl": dict(kind="gee", mode="replicated"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("variant", nargs="*", help=list(VARIANTS))
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list or not args.variant:
+        for k in VARIANTS:
+            print(k)
+        return
+    for name in args.variant:
+        v = VARIANTS[name]
+        if v["kind"] == "gee":
+            run_gee(mode=v["mode"])
+        else:
+            run_cell(v["arch"], v["shape"], **v["kw"])
+
+
+if __name__ == "__main__":
+    main()

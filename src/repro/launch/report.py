@@ -1,0 +1,108 @@
+"""Render EXPERIMENTS.md tables from artifacts/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report [--section dryrun|roofline]
+
+Prints markdown to stdout; the EXPERIMENTS.md author splices it in.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "artifacts", "dryrun")
+
+
+def _load(mesh: str):
+    d = os.path.join(ART, mesh)
+    if not os.path.isdir(d):
+        return {}
+    out = {}
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            out[fn[:-5]] = json.load(open(os.path.join(d, fn)))
+    return out
+
+
+def _fmt(x, unit=""):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    for div, suf in ((1e12, "T"), (1e9, "G"), (1e6, "M"), (1e3, "K")):
+        if abs(x) >= div:
+            return f"{x / div:.2f}{suf}{unit}"
+    return f"{x:.3g}{unit}"
+
+
+def dryrun_table(mesh: str) -> str:
+    recs = _load(mesh)
+    lines = [
+        f"### {mesh}",
+        "",
+        "| arch | shape | compile s | bytes/dev (arg+tmp) | "
+        "collectives (AG/AR/RS/A2A/CP counts) | fits 16GB |",
+        "|---|---|---|---|---|---|",
+    ]
+    for key, r in recs.items():
+        if r.get("tag"):
+            continue              # hillclimb variants live in §Perf
+        if "memory_analysis" not in r:
+            ma = {"argument_size_in_bytes": r.get("arg_bytes", 0),
+                  "temp_size_in_bytes": r.get("temp_bytes", 0)}
+        else:
+            ma = r["memory_analysis"]
+        tot = (ma.get("argument_size_in_bytes", 0)
+               + ma.get("temp_size_in_bytes", 0))
+        c = r.get("collectives", {})
+
+        def cnt(k):
+            return c.get(k, {}).get("count", 0)
+
+        cs = (f"{cnt('all-gather')}/{cnt('all-reduce')}/"
+              f"{cnt('reduce-scatter')}/{cnt('all-to-all')}/"
+              f"{cnt('collective-permute')}")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('compile_s', 0):.1f} "
+            f"| {tot/1e9:.2f} GB | {cs} "
+            f"| {'Y' if tot <= 16e9 else 'N'} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh: str = "pod16x16") -> str:
+    recs = _load(mesh)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| MODEL_FLOPS | useful ratio | MFU |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key, r in recs.items():
+        if "compute_s" not in r or r.get("tag"):
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {_fmt(r.get('model_flops_global'))} "
+            f"| {r.get('useful_flops_ratio', 0):.2f} "
+            f"| {r.get('mfu', 0):.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+    if args.section in ("dryrun", "all"):
+        print("## §Dry-run tables\n")
+        for mesh in ("pod16x16", "pod2x16x16"):
+            print(dryrun_table(mesh))
+            print()
+    if args.section in ("roofline", "all"):
+        print("## §Roofline table (single-pod)\n")
+        print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""End-to-end training driver.
+
+Runs any registry arch (or its reduced config on CPU) with the full
+production loop: sharded step, grad-accum, async atomic checkpoints,
+resume-from-LATEST, heartbeats, straggler monitoring, optional GEE
+embedding init and int8 gradient compression.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --reduced \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.sharding import make_rules, use_sharding
+from repro.training import checkpoint as CK
+from repro.training.fault_tolerance import Heartbeat, StragglerMonitor
+from repro.training.optimizer import AdamW, cosine_schedule
+from repro.training.train_loop import make_train_step
+
+
+def build_batch_fn(cfg, args):
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                          global_batch=args.batch, seed=args.seed)
+    src = SyntheticTokens(data_cfg)
+
+    def get(step):
+        b = {"tokens": jnp.asarray(src.batch(step))}
+        if cfg.is_encdec:
+            rng = np.random.default_rng(step)
+            b["frames"] = jnp.asarray(rng.normal(
+                0, 1, (args.batch, cfg.n_frames, cfg.d_model)
+            ).astype(np.float32))
+        return b
+    return get
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="family-preserving small config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--gee-embed-init", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, remat=False) if args.reduced else cfg
+
+    mesh = make_host_mesh()
+    rules = make_rules(mesh)
+    opt = AdamW(lr=args.lr, state_dtype=cfg.state_dtype,
+                schedule=cosine_schedule(warmup=20, total=args.steps))
+    get_batch = build_batch_fn(cfg, args)
+
+    with use_sharding(mesh, rules):
+        step_fn = jax.jit(make_train_step(
+            cfg, opt, accum_steps=args.accum_steps,
+            compress_grads=args.compress_grads), donate_argnums=(0, 1))
+
+        params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+        if args.gee_embed_init:
+            from repro.core.embed_init import gee_embedding_init
+            stream = np.concatenate(
+                [np.asarray(get_batch(s)["tokens"]).reshape(-1)
+                 for s in range(4)])
+            table = gee_embedding_init(stream, cfg.padded_vocab,
+                                       cfg.d_model)
+            params["embed"]["tokens"] = jnp.asarray(
+                table, params["embed"]["tokens"].dtype)
+            print("[train] GEE co-occurrence embedding init applied")
+        opt_state = opt.init(params)
+
+        start = 0
+        ck = None
+        if args.ckpt_dir:
+            ck = CK.AsyncCheckpointer(args.ckpt_dir)
+            if CK.latest_step(args.ckpt_dir) is not None:
+                (params, opt_state), start = CK.restore_checkpoint(
+                    args.ckpt_dir, (params, opt_state))
+                print(f"[train] resumed from step {start}")
+            hb = Heartbeat(args.ckpt_dir)
+        mon = StragglerMonitor()
+
+        losses = []
+        for step in range(start, args.steps):
+            t0 = time.time()
+            batch = get_batch(step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            mon.record(step, dt)
+            losses.append(loss)
+            if args.ckpt_dir:
+                hb.beat(step)
+                if (step + 1) % args.ckpt_every == 0:
+                    ck.save(step + 1, (params, opt_state))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"[train] step {step:5d} loss {loss:8.4f} "
+                      f"gnorm {float(metrics['grad_norm']):8.3f} "
+                      f"dt {dt*1e3:7.1f}ms")
+
+        if ck:
+            ck.save(args.steps, (params, opt_state))
+            ck.close()
+        if mon.straggler_steps:
+            print(f"[train] stragglers: {mon.straggler_steps}")
+        print(f"[train] first loss {losses[0]:.4f} last {losses[-1]:.4f}")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+"""Shared model building blocks + the ParamSpec system.
+
+Parameters are plain pytrees of jnp arrays.  Every parameter is declared
+as a ParamSpec (shape, logical axis names, init rule) so that:
+  * init_from_specs() materializes real params for training/smoke tests,
+  * abstract_from_specs() yields ShapeDtypeStructs for the dry-run
+    (no allocation — full 314B configs lower from specs alone),
+  * sharding rules map logical axis names -> PartitionSpec uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# ParamSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical: tuple               # logical axis name per dim (or None)
+    init: str = "normal"         # normal | zeros | ones | mamba_a | dt_bias | pos
+    dtype: Any = None            # None -> config param_dtype
+    fan_in: int = 0              # 0 -> last-but-one dim (normal init scale)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_spec)
+
+
+def stack_spec(spec: ParamSpec, n: int, axis_name: str = "layers") -> ParamSpec:
+    return ParamSpec((n,) + spec.shape, (axis_name,) + spec.logical,
+                     spec.init, spec.dtype, spec.fan_in)
+
+
+def stack_specs(tree, n: int, axis_name: str = "layers"):
+    return tree_map_specs(lambda s: stack_spec(s, n, axis_name), tree)
+
+
+def _init_leaf(spec: ParamSpec, key, default_dtype) -> jnp.ndarray:
+    dtype = spec.dtype or default_dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "mamba_a":
+        # A_log init: log of uniform [1, 16] (mamba2 convention)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "dt_bias":
+        # softplus^-1 of dt ~ uniform[1e-3, 1e-1]
+        dt = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(dt)).astype(dtype)
+    if spec.init == "pos":
+        # sinusoidal-ish small init for learned positions
+        return (0.02 * jax.random.normal(key, spec.shape, jnp.float32)
+                ).astype(dtype)
+    # default: truncated-normal, 1/sqrt(fan_in)
+    fan_in = spec.fan_in
+    if fan_in == 0:
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    w = jax.random.truncated_normal(key, -2.0, 2.0, spec.shape, jnp.float32)
+    return (w * scale).astype(dtype)
+
+
+def init_from_specs(tree, key, default_dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k, default_dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_from_specs(tree, default_dtype=jnp.float32):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype),
+        tree)
+
+
+def logical_axes_tree(tree):
+    return tree_map_specs(lambda s: s.logical, tree)
+
+
+def count_specs(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding hook (set by repro.sharding at jit-build time)
+# ---------------------------------------------------------------------------
+
+_ACT_SHARDER: Optional[Callable] = None
+
+
+def set_activation_sharder(fn: Optional[Callable]) -> None:
+    """fn(x, logical_axes) -> x with sharding constraint (or None to clear)."""
+    global _ACT_SHARDER
+    _ACT_SHARDER = fn
+
+
+def ashard(x, *logical_axes):
+    """Annotate activation x with logical axes (no-op outside pjit builds)."""
+    if _ACT_SHARDER is None:
+        return x
+    return _ACT_SHARDER(x, logical_axes)
+
+
+# ---------------------------------------------------------------------------
+# Core ops
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale.astype(dt) + bias.astype(dt)
+
+
+def norm_specs(cfg, dim: int):
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((dim,), ("embed",), "ones"),
+                "bias": ParamSpec((dim,), ("embed",), "zeros")}
+    return {"scale": ParamSpec((dim,), ("embed",), "ones")}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def head_norm_specs(cfg, n_heads: int, dim: int):
+    """Per-head RMS norm (qk-norm)."""
+    return {"scale": ParamSpec((n_heads, dim), ("heads", None), "ones")}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                     # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin,
+                           x1f * sin + x2f * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg, d_model: int, d_ff: int):
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+            "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+            "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+        }
+    return {
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "b_up": ParamSpec((d_ff,), ("mlp",), "zeros"),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+        "b_down": ParamSpec((d_model,), ("embed",), "zeros"),
+    }
+
+
+def apply_mlp(cfg, p, x):
+    cdt = x.dtype
+    if cfg.act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(cdt))
+        u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(cdt))
+        h = jax.nn.silu(g) * u
+        h = ashard(h, "batch", "seq", "mlp")
+        return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(cdt))
+    h = jnp.einsum("...d,df->...f", x, p["w_up"].astype(cdt)) + p["b_up"].astype(cdt)
+    h = jax.nn.gelu(h)
+    h = ashard(h, "batch", "seq", "mlp")
+    return (jnp.einsum("...f,fd->...d", h, p["w_down"].astype(cdt))
+            + p["b_down"].astype(cdt))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg):
+    v = cfg.padded_vocab
+    sp = {"tokens": ParamSpec((v, cfg.d_model), ("vocab", "embed"),
+                              fan_in=cfg.d_model)}
+    if cfg.learned_pos:
+        sp["positions"] = ParamSpec((8192, cfg.d_model), (None, "embed"), "pos")
+    return sp
+
+
+def embed_tokens(cfg, p, tokens, positions=None):
+    x = jnp.take(p["tokens"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    if "positions" in p and positions is not None:
+        pos_emb = jnp.take(p["positions"], jnp.minimum(
+            positions, p["positions"].shape[0] - 1), axis=0)
+        x = x + pos_emb.astype(x.dtype)
+    return x
+
+
+def unembed_specs(cfg):
+    return {"w": ParamSpec((cfg.d_model, cfg.padded_vocab),
+                           ("embed", "vocab"))}
+
+
+def unembed(cfg, p, x):
+    logits = jnp.einsum("...d,dv->...v", x, p["w"].astype(x.dtype))
+    return ashard(logits, "batch", "seq", "vocab")

@@ -1,0 +1,287 @@
+"""Top-level model API: one entry point per lifecycle stage.
+
+    param_specs(cfg)            -> ParamSpec tree (shapes + logical axes)
+    init_params(cfg, key)       -> materialized pytree (smoke/training)
+    abstract_params(cfg)        -> ShapeDtypeStruct tree (dry-run, no alloc)
+    forward_train(cfg, p, batch)-> (loss, metrics)
+    prefill(cfg, p, batch)      -> (last_logits, cache)
+    decode_step(cfg, p, tok, pos, cache) -> (logits, cache)
+    cache_specs / init_cache    -> decode cache (abstract / real)
+    input_specs(cfg, shape)     -> ShapeDtypeStructs for the dry-run
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (abstract_from_specs, apply_norm, ashard,
+                                 count_specs, embed_specs, embed_tokens,
+                                 init_from_specs, logical_axes_tree,
+                                 norm_specs, stack_specs, unembed,
+                                 unembed_specs)
+
+# ---------------------------------------------------------------------------
+# Parameter trees
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig):
+    sp: Dict[str, Any] = {
+        "embed": embed_specs(cfg),
+        "final_norm": norm_specs(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        sp["unembed"] = unembed_specs(cfg)
+    if cfg.is_encdec:
+        sp.update(tfm.whisper_specs(cfg))
+    elif cfg.xlstm is not None:
+        sp["stack"] = tfm.xlstm_stack_specs(cfg)
+    elif cfg.ssm is not None and cfg.attn_every:
+        sp["stack"] = tfm.zamba_stack_specs(cfg)
+    else:
+        sp["stack"] = tfm.uniform_stack_specs(cfg)
+    return sp
+
+
+def init_params(cfg: ModelConfig, key):
+    return init_from_specs(param_specs(cfg), key,
+                           jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract_from_specs(param_specs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def logical_axes(cfg: ModelConfig):
+    return logical_axes_tree(param_specs(cfg))
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    total = count_specs(param_specs(cfg))
+    if active_only and cfg.moe is not None:
+        m = cfg.moe
+        inactive = (cfg.n_layers * 3 * (m.num_experts - m.top_k)
+                    * cfg.d_model * m.expert_d_ff)
+        total -= inactive
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _trunk_train(cfg, params, x, positions, impl):
+    """Shared trunk: stacked blocks, train shape.  Returns (x, aux)."""
+    if cfg.xlstm is not None:
+        x, _, aux = tfm.xlstm_stack_apply(cfg, params["stack"], x, None)
+    elif cfg.ssm is not None and cfg.attn_every:
+        x, _, aux = tfm.zamba_stack_train(cfg, params["stack"], x, positions,
+                                          impl=impl, collect=False)
+    else:
+        x, _, aux = tfm.uniform_stack_train(cfg, params["stack"], x,
+                                            positions, impl=impl)
+    return x, aux
+
+
+def _logits(cfg, params, x):
+    x = apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x,
+                            params["embed"]["tokens"].astype(x.dtype))
+    else:
+        logits = unembed(cfg, params["unembed"], x)
+    return logits
+
+
+def _mask_padded_vocab(cfg, logits):
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    ids = jnp.arange(cfg.padded_vocab)
+    return jnp.where(ids < cfg.vocab, logits, -1e30)
+
+
+def cross_entropy(cfg, logits, targets):
+    """logits: (B, S, Vp) any float dtype; targets: (B, S) int."""
+    logits = _mask_padded_vocab(cfg, logits.astype(jnp.float32))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean(), logz
+
+
+def forward_logits(cfg, params, tokens, frames=None, impl="flash"):
+    """Full-sequence logits (train shape)."""
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    x = embed_tokens(cfg, params["embed"], tokens,
+                     positions if cfg.learned_pos else None)
+    x = ashard(x, "batch", "seq", "embed")
+    if cfg.is_encdec:
+        enc_out = tfm.whisper_encode(cfg, params, frames)
+        x, _, aux = tfm.whisper_decode_train(cfg, params, enc_out, x,
+                                             positions, impl=impl)
+    else:
+        x, aux = _trunk_train(cfg, params, x, positions, impl)
+    return _logits(cfg, params, x), aux
+
+
+def forward_train(cfg, params, batch, impl="flash", aux_weight=0.01,
+                  z_weight=0.0):
+    """Next-token LM loss. batch: {"tokens": (B,S)[, "frames": (B,F,D)]}."""
+    tokens = batch["tokens"]
+    logits, aux = forward_logits(cfg, params, tokens,
+                                 frames=batch.get("frames"), impl=impl)
+    loss, logz = cross_entropy(cfg, logits[:, :-1], tokens[:, 1:])
+    total = loss + aux_weight * aux
+    if z_weight:
+        total = total + z_weight * jnp.square(logz[:, :-1]).mean()
+    metrics = {"loss": loss, "aux_loss": aux,
+               "tokens": jnp.array(tokens.shape[0] * (tokens.shape[1] - 1))}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg, params, batch, impl="flash", max_len=None):
+    """Process the prompt; return (last-token logits, decode cache).
+
+    max_len sizes the KV caches (>= prompt length) so decode can continue
+    past the prompt."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = embed_tokens(cfg, params["embed"], tokens,
+                     positions if cfg.learned_pos else None)
+    x = ashard(x, "batch", "seq", "embed")
+
+    if cfg.is_encdec:
+        enc_out = tfm.whisper_encode(cfg, params, batch["frames"])
+        x, cache, _ = tfm.whisper_decode_train(cfg, params, enc_out, x,
+                                               positions, impl=impl,
+                                               collect_kv=True,
+                                               max_len=max_len)
+    elif cfg.xlstm is not None:
+        x, cache, _ = tfm.xlstm_stack_apply(cfg, params["stack"], x, None)
+    elif cfg.ssm is not None and cfg.attn_every:
+        x, cache, _ = tfm.zamba_stack_train(cfg, params["stack"], x,
+                                            positions, impl=impl,
+                                            collect=True, max_len=max_len)
+    else:
+        x, cache, _ = tfm.uniform_stack_train(cfg, params["stack"], x,
+                                              positions, impl=impl,
+                                              collect_kv=True,
+                                              max_len=max_len)
+    logits = _logits(cfg, params, x[:, -1:])[:, 0]
+    return _mask_padded_vocab(cfg, logits), cache
+
+
+def decode_step(cfg, params, token, pos, cache):
+    """One decode step. token: (B,) int32; pos: scalar int32 (position of
+    the token being fed).  Returns (logits (B, Vp), new_cache)."""
+    B = token.shape[0]
+    pos_b = jnp.full((B,), pos)
+    x = embed_tokens(cfg, params["embed"], token[:, None],
+                     pos_b[:, None] if cfg.learned_pos else None)[:, 0]
+
+    if cfg.is_encdec:
+        x, new_cache, _ = tfm.whisper_stack_decode(cfg, params, x, pos, cache)
+    elif cfg.xlstm is not None:
+        x2, new_cache, _ = tfm.xlstm_stack_apply(cfg, params["stack"],
+                                                 x[:, None], cache)
+        x = x2[:, 0]
+    elif cfg.ssm is not None and cfg.attn_every:
+        x, new_cache, _ = tfm.zamba_stack_decode(cfg, params["stack"], x,
+                                                 pos, cache)
+    else:
+        x, new_cache, _ = tfm.uniform_stack_decode(cfg, params["stack"], x,
+                                                   pos, cache)
+    logits = _logits(cfg, params, x[:, None])[:, 0]
+    return _mask_padded_vocab(cfg, logits), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.is_encdec:
+        self_sp = stack_specs(attn_mod.kv_cache_specs(cfg, batch, max_len,
+                                                      dtype), cfg.dec_layers)
+        from repro.models.layers import ParamSpec
+        cross_shape = (batch, cfg.n_frames, cfg.n_kv_heads, cfg.head_dim)
+        cross_sp = stack_specs(
+            {"k": ParamSpec(cross_shape, ("batch", None, "kv_heads", None),
+                            "zeros", dtype),
+             "v": ParamSpec(cross_shape, ("batch", None, "kv_heads", None),
+                            "zeros", dtype)}, cfg.dec_layers)
+        return {"self": self_sp, "cross": cross_sp}
+    if cfg.xlstm is not None:
+        return tfm.xlstm_state_specs(cfg, batch)
+    if cfg.ssm is not None and cfg.attn_every:
+        g, per, tail = tfm.zamba_layout(cfg)
+        group = {"mamba": stack_specs(
+                     ssm_mod.ssm_state_specs(cfg, batch, dtype), per,
+                     "inner"),
+                 "attn": attn_mod.kv_cache_specs(cfg, batch, max_len, dtype)}
+        sp = {"groups": stack_specs(group, g, "layers"), "tail": None}
+        if tail:
+            sp["tail"] = stack_specs(
+                ssm_mod.ssm_state_specs(cfg, batch, dtype), tail, "layers")
+        return sp
+    return stack_specs(attn_mod.kv_cache_specs(cfg, batch, max_len, dtype),
+                       cfg.n_layers)
+
+
+def abstract_cache(cfg, batch: int, max_len: int):
+    return abstract_from_specs(cache_specs(cfg, batch, max_len))
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Zero-initialized decode cache (for decode-from-scratch tests)."""
+    specs = cache_specs(cfg, batch, max_len)
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype or jnp.float32),
+        specs, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "init"))
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.is_encdec:
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frames, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.is_encdec:
+            out["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frames, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+        return out
+    # decode: one new token against a cache of size S
+    return {
+        "token": jax.ShapeDtypeStruct((B,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": abstract_cache(cfg, B, S),
+    }

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based dispatch.
+
+Design notes (roofline-relevant):
+  * Dense-einsum-over-all-experts routing would inflate HLO FLOPs by
+    E/top_k (15x for qwen2-moe) and wreck the MODEL_FLOPS/HLO_FLOPS
+    ratio; instead we use sort-based capacity dispatch (MegaBlocks /
+    MaxText style): tokens are argsorted by expert id *per batch row*,
+    packed into (E, capacity) buckets, run through a batched expert
+    einsum, and scattered back with their gate weights.  HLO FLOPs are
+    then ~ top_k * capacity_factor * dense-equivalent — faithful to the
+    active-parameter cost model 6*N_active*D.
+  * Routing is vmapped over the batch row so every sort/gather stays
+    device-local under batch sharding (no routing collectives on the
+    data axis; expert weights are TP-sharded on d_ff over "model").
+  * Dropped tokens (capacity overflow) contribute zero — standard
+    capacity-factor semantics; cf=1.25 default.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, ashard
+
+def moe_specs(cfg):
+    d = cfg.d_model
+    m = cfg.moe
+    sp = {
+        "router": ParamSpec((d, m.num_experts), ("embed", "experts")),
+        "w_gate": ParamSpec((m.num_experts, d, m.expert_d_ff),
+                            ("experts", "embed", "mlp"), fan_in=d),
+        "w_up": ParamSpec((m.num_experts, d, m.expert_d_ff),
+                          ("experts", "embed", "mlp"), fan_in=d),
+        "w_down": ParamSpec((m.num_experts, m.expert_d_ff, d),
+                            ("experts", "mlp", "embed"), fan_in=m.expert_d_ff),
+    }
+    if m.num_shared:
+        sp["shared"] = {
+            "w_gate": ParamSpec((d, m.shared_d_ff), ("embed", "mlp")),
+            "w_up": ParamSpec((d, m.shared_d_ff), ("embed", "mlp")),
+            "w_down": ParamSpec((m.shared_d_ff, d), ("mlp", "embed")),
+        }
+        # qwen2-moe gates the shared expert with a sigmoid scalar
+        sp["shared_gate"] = ParamSpec((d, 1), ("embed", None))
+    return sp
+
+
+def _capacity(tokens: int, num_experts: int, top_k: int, cf: float) -> int:
+    c = int(tokens * top_k * cf / num_experts) + 1
+    return min(max(c, top_k), tokens)
+
+
+def _route_row(x, router_logits, w_gate, w_up, w_down, top_k: int,
+               cf: float):
+    """One batch row. x: (S, D); router_logits: (S, E). Returns (S, D)."""
+    S, D = x.shape
+    E = router_logits.shape[-1]
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)       # (S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)               # renormalize
+
+    flat_expert = expert_idx.reshape(-1)                       # (S*k,)
+    flat_token = jnp.repeat(jnp.arange(S), top_k)
+    flat_gate = gate_vals.reshape(-1)
+
+    order = jnp.argsort(flat_expert)                           # stable
+    e_sorted = flat_expert[order]
+    t_sorted = flat_token[order]
+    g_sorted = flat_gate[order]
+
+    # position within each expert's bucket
+    starts = jnp.searchsorted(e_sorted, e_sorted, side="left")
+    pos = jnp.arange(S * top_k) - starts
+    C = _capacity(S, E, top_k, cf)
+    keep = pos < C
+    dest = jnp.where(keep, e_sorted * C + pos, E * C)          # overflow slot
+
+    # pack tokens into (E*C+1, D); the +1 row swallows dropped tokens
+    buf = jnp.zeros((E * C + 1, D), x.dtype)
+    buf = buf.at[dest].set(x[t_sorted])
+    buf = buf[:-1].reshape(E, C, D)
+
+    # batched expert FFN (swiglu)
+    cdt = x.dtype
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(cdt))
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up.astype(cdt))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w_down.astype(cdt))
+    out_buf = out_buf.reshape(E * C, D)
+
+    # scatter back with gates
+    contrib = jnp.where(keep[:, None],
+                        out_buf[jnp.minimum(dest, E * C - 1)]
+                        * g_sorted[:, None].astype(cdt),
+                        0.0)
+    out = jnp.zeros((S, D), cdt).at[t_sorted].add(contrib)
+    return out
+
+
+def apply_moe(cfg, p, x):
+    """x: (B, S, D) -> (B, S, D).  Routed experts + optional shared block."""
+    m = cfg.moe
+    cdt = x.dtype
+    router_logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(cdt))
+
+    routed = jax.vmap(
+        lambda xr, lr: _route_row(xr, lr, p["w_gate"], p["w_up"],
+                                  p["w_down"], m.top_k,
+                                  m.capacity_factor))(x, router_logits)
+    routed = ashard(routed, "batch", "seq", "embed")
+
+    if m.num_shared:
+        sh = p["shared"]
+        g = jnp.einsum("bsd,df->bsf", x, sh["w_gate"].astype(cdt))
+        u = jnp.einsum("bsd,df->bsf", x, sh["w_up"].astype(cdt))
+        h = jax.nn.silu(g) * u
+        shared_out = jnp.einsum("bsf,fd->bsd", h, sh["w_down"].astype(cdt))
+        sg = jax.nn.sigmoid(
+            jnp.einsum("bsd,do->bso", x, p["shared_gate"].astype(cdt)))
+        routed = routed + sg * shared_out
+
+    return routed
+
+
+def aux_load_balance_loss(cfg, p, x):
+    """Switch-style load-balance auxiliary loss (used by train loop)."""
+    m = cfg.moe
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    _, idx = jax.lax.top_k(probs, m.top_k)
+    hard = jax.nn.one_hot(idx, m.num_experts).sum(-2)        # (B,S,E)
+    frac_tokens = hard.mean((0, 1)) / m.top_k
+    frac_probs = probs.mean((0, 1))
+    return m.num_experts * jnp.sum(frac_tokens * frac_probs)

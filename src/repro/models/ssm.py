@@ -1,0 +1,204 @@
+"""Mamba2 (SSD) block: chunked-parallel scan for train/prefill, O(1)-state
+recurrence for decode.
+
+Faithful to the SSD formulation (Dao & Gu 2024): scalar-per-head A,
+single B/C group, depthwise conv frontend, gated RMSNorm before out-proj.
+The chunked algorithm computes, per chunk of length L:
+  intra-chunk:  Y_ij = C_i . B_j * exp(cumA_i - cumA_j) * dt_j  (j <= i)
+  chunk state:  S_c  = sum_j exp(cumA_last - cumA_j) * dt_j * (B_j x X_j)
+  inter-chunk:  lax.scan over chunk states (the only sequential part)
+so the sequential depth is T/chunk instead of T.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, ashard, rms_norm
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.head_dim, s.state
+
+
+def ssm_specs(cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, Pdim, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * N          # x, B, C all pass the conv
+    return {
+        # in_proj -> [z, xBC, dt]
+        "w_in": ParamSpec((d, 2 * d_inner + 2 * N + H), ("embed", "mlp")),
+        "conv_w": ParamSpec((s.conv, conv_dim), (None, "mlp"), fan_in=s.conv),
+        "conv_b": ParamSpec((conv_dim,), ("mlp",), "zeros"),
+        "A_log": ParamSpec((H,), (None,), "mamba_a"),
+        "D": ParamSpec((H,), (None,), "ones"),
+        "dt_bias": ParamSpec((H,), (None,), "dt_bias"),
+        "norm_scale": ParamSpec((d_inner,), ("mlp",), "ones"),
+        "w_out": ParamSpec((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _split_in(cfg, proj):
+    d_inner, H, Pdim, N = ssm_dims(cfg)
+    z, xBC, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _conv1d(cfg, p, xBC, conv_state=None):
+    """Causal depthwise conv. xBC: (B, T, conv_dim).
+
+    Returns (out (B,T,conv_dim), new_conv_state (B, conv-1, conv_dim)).
+    """
+    W = p["conv_w"]                      # (K, conv_dim)
+    K = W.shape[0]
+    B = xBC.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, xBC.shape[-1]), xBC.dtype)
+    xpad = jnp.concatenate([conv_state, xBC], axis=1)
+    # depthwise causal conv as sum of shifted scaled copies (K is tiny)
+    out = sum(xpad[:, i:i + xBC.shape[1]] * W[i].astype(xBC.dtype)
+              for i in range(K))
+    out = out + p["conv_b"].astype(xBC.dtype)
+    out = jax.nn.silu(out)
+    new_state = xpad[:, xpad.shape[1] - (K - 1):]
+    return out, new_state
+
+
+def _segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} a[..., k] for
+    i >= j, -inf elsewhere.  a: (..., L)."""
+    L = a.shape[-1]
+    c = jnp.cumsum(a, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]      # cum_i - cum_j
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """SSD chunked scan.
+
+    x:  (B, T, H, P)   inputs per head
+    dt: (B, T, H)      positive step sizes
+    A:  (H,)           negative decay rates
+    Bm: (B, T, N)      input mixers (single group)
+    Cm: (B, T, N)      output mixers
+    initial_state: (B, H, N, P) carried state (decode / continuation)
+    Returns y: (B, T, H, P), final_state: (B, H, N, P).
+    """
+    Bsz, T, H, Pdim = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:  # dt=0 on padding => decay 1, contribution 0 (exact)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    T_pad = T + pad
+    nc = T_pad // chunk
+
+    xc = x.reshape(Bsz, nc, chunk, H, Pdim)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    a = dtc * A                                   # (B,nc,L,H), negative
+    a = a.transpose(0, 1, 3, 2)                   # (B,nc,H,L)
+    cum_a = jnp.cumsum(a, axis=-1)                # (B,nc,H,L)
+
+    # ---- intra-chunk (quadratic within chunk) -----------------------------
+    Lmat = jnp.exp(_segsum(a))                    # (B,nc,H,L,L)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)    # (B,nc,L,L)
+    W = CB[:, :, None] * Lmat * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", W, xc)
+
+    # ---- per-chunk state contribution -------------------------------------
+    decay_to_end = jnp.exp(cum_a[..., -1:] - cum_a)          # (B,nc,H,L)
+    Sc = jnp.einsum("bchl,bclh,bcln,bclhp->bchnp",
+                    decay_to_end, dtc, Bc, xc)               # (B,nc,H,N,P)
+
+    # ---- inter-chunk recurrence (sequential over chunks) -------------------
+    chunk_decay = jnp.exp(cum_a[..., -1])                    # (B,nc,H)
+
+    def step(S_prev, inp):
+        Sc_c, dec_c = inp                                    # (B,H,N,P),(B,H)
+        S_new = S_prev * dec_c[..., None, None] + Sc_c
+        return S_new, S_prev
+
+    S0 = (jnp.zeros((Bsz, H, N, Pdim), x.dtype) if initial_state is None
+          else initial_state.astype(x.dtype))
+    S_final, S_prevs = jax.lax.scan(
+        step, S0, (Sc.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)               # (B,nc,H,N,P)
+
+    # ---- inter-chunk output ------------------------------------------------
+    decay_from_start = jnp.exp(cum_a)                        # (B,nc,H,L)
+    y_inter = jnp.einsum("bcln,bchl,bchnp->bclhp",
+                         Cc, decay_from_start, S_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, T_pad, H, Pdim)
+    return y[:, :T], S_final
+
+
+def apply_ssm(cfg, p, x, state=None):
+    """Full mamba2 block. x: (B, T, D).
+
+    state: None (train) or dict(conv, ssm) for chunk-continuation.
+    Returns (out (B,T,D), new_state).
+    """
+    s = cfg.ssm
+    d_inner, H, Pdim, N = ssm_dims(cfg)
+    cdt = x.dtype
+    proj = jnp.einsum("btd,de->bte", x, p["w_in"].astype(cdt))
+    z, xBC, dt = _split_in(cfg, proj)
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _conv1d(cfg, p, xBC, conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + N], axis=-1)
+    xs = xs.reshape(*xs.shape[:2], H, Pdim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    init_S = None if state is None else state["ssm"]
+    y, S_final = ssd_chunked(xs.astype(jnp.float32), dt, A,
+                             Bm.astype(jnp.float32),
+                             Cm.astype(jnp.float32), s.chunk,
+                             initial_state=init_S)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(*y.shape[:2], d_inner).astype(cdt)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    y = ashard(y, "batch", "seq", "mlp")
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"].astype(cdt))
+    new_state = {"conv": new_conv, "ssm": S_final}
+    return out, new_state
+
+
+def init_ssm_state(cfg, batch: int, dtype):
+    s = cfg.ssm
+    d_inner, H, Pdim, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {"conv": jnp.zeros((batch, s.conv - 1, conv_dim), dtype),
+            "ssm": jnp.zeros((batch, H, N, Pdim), jnp.float32)}
+
+
+def ssm_state_specs(cfg, batch: int, dtype):
+    s = cfg.ssm
+    d_inner, H, Pdim, N = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * N
+    return {
+        "conv": ParamSpec((batch, s.conv - 1, conv_dim),
+                          ("batch", None, "mlp"), "zeros", dtype),
+        "ssm": ParamSpec((batch, H, N, Pdim),
+                         ("batch", "heads", None, None), "zeros",
+                         jnp.float32),
+    }
+
+
+def decode_ssm(cfg, p, x, state):
+    """One-token decode. x: (B, D). Returns (out (B,D), new_state)."""
+    out, new_state = apply_ssm(cfg, p, x[:, None], state)
+    return out[:, 0], new_state

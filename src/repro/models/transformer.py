@@ -1,0 +1,467 @@
+"""Block assembly for every assigned architecture family.
+
+All stacks scan over layers (``lax.scan`` over stacked params) with
+optional remat — this keeps the HLO O(1) in depth, which is what makes an
+80-layer 110B config lower+compile in seconds on the dry-run host.
+
+Block contract (uniform across attn / moe / mamba / mlstm / slstm):
+
+    body(x, p, c, mode) -> (x_out, new_cache, aux)
+
+where `c`/`new_cache` are per-layer cache entries (None in train mode)
+and aux is a scalar (MoE load-balance loss, 0 elsewhere).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import (ParamSpec, apply_mlp, apply_norm, ashard,
+                                 mlp_specs, norm_specs, stack_specs)
+
+# ---------------------------------------------------------------------------
+# current mesh hook (set by repro.sharding.use_sharding)
+# ---------------------------------------------------------------------------
+
+_CURRENT_MESH = None
+
+
+def set_current_mesh(mesh) -> None:
+    global _CURRENT_MESH
+    _CURRENT_MESH = mesh
+
+
+def current_mesh():
+    return _CURRENT_MESH
+
+
+# ---------------------------------------------------------------------------
+# Attention (+MLP / +MoE) block
+# ---------------------------------------------------------------------------
+
+
+def attn_block_specs(cfg, use_moe: bool = False, cross: bool = False):
+    sp = {"ln1": norm_specs(cfg, cfg.d_model),
+          "attn": attn.attn_specs(cfg),
+          "ln2": norm_specs(cfg, cfg.d_model)}
+    if cross:
+        sp["lnx"] = norm_specs(cfg, cfg.d_model)
+        sp["xattn"] = attn.attn_specs(cfg, cross=True)
+    if use_moe:
+        sp["moe"] = moe_mod.moe_specs(cfg)
+    elif cfg.d_ff:
+        sp["mlp"] = mlp_specs(cfg, cfg.d_model, cfg.d_ff)
+    return sp
+
+
+def _ffn(cfg, p, x):
+    """Second half-block: norm + (moe|mlp) + residual. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        h = apply_norm(cfg, p["ln2"], x)
+        aux = moe_mod.aux_load_balance_loss(cfg, p["moe"], h)
+        x = x + moe_mod.apply_moe(cfg, p["moe"], h)
+    elif "mlp" in p:
+        x = x + apply_mlp(cfg, p["mlp"], apply_norm(cfg, p["ln2"], x))
+    return x, aux
+
+
+def attn_block_train(cfg, p, x, positions, *, impl="flash", causal=True,
+                     enc_out=None):
+    """Train/prefill-shaped attention block. Returns (x, kv, aux)."""
+    h = apply_norm(cfg, p["ln1"], x)
+    q, k, v = attn.project_qkv(cfg, p["attn"], h, positions)
+    if causal:
+        o = attn.self_attention(cfg, q, k, v, positions, positions, impl=impl)
+    else:
+        o = attn.attn_full(q, k, v, positions, positions, causal=False)
+    x = x + attn.out_proj(cfg, p["attn"], o)
+    if enc_out is not None:                      # decoder cross-attention
+        h = apply_norm(cfg, p["lnx"], x)
+        qx, _, _ = attn.project_qkv(cfg, p["xattn"], h, positions, rope=False)
+        ek = jnp.einsum("bfd,dhk->bfhk", enc_out,
+                        p["xattn"]["wk"].astype(enc_out.dtype))
+        ev = jnp.einsum("bfd,dhk->bfhk", enc_out,
+                        p["xattn"]["wv"].astype(enc_out.dtype))
+        ox = attn.cross_attention(cfg, qx, ek, ev)
+        x = x + attn.out_proj(cfg, p["xattn"], ox)
+    x, aux = _ffn(cfg, p, x)
+    x = ashard(x, "batch", "seq", "embed")
+    return x, (k, v), aux
+
+
+def attn_block_decode(cfg, p, x, pos, cache, *, cross_kv=None):
+    """One-token attention block. x: (B, D). cache: {"k","v"}[, cross]."""
+    h = apply_norm(cfg, p["ln1"], x)[:, None]            # (B,1,D)
+    pos_arr = jnp.full((1,), pos)
+    q, k, v = attn.project_qkv(cfg, p["attn"], h, pos_arr)
+    o, new_cache = attn.decode_attention(
+        cfg, cache, q[:, 0], k[:, 0], v[:, 0], pos, mesh=current_mesh())
+    x = x + attn.out_proj(cfg, p["attn"], o[:, None])[:, 0]
+    if cross_kv is not None:
+        hx = apply_norm(cfg, p["lnx"], x)[:, None]
+        qx, _, _ = attn.project_qkv(cfg, p["xattn"], hx, pos_arr, rope=False)
+        ox = attn.cross_attention(cfg, qx, cross_kv["k"], cross_kv["v"])
+        x = x + attn.out_proj(cfg, p["xattn"], ox)[:, 0]
+    x2, aux = _ffn(cfg, p, x[:, None])
+    return x2[:, 0], new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / mLSTM / sLSTM blocks (pre-norm + residual)
+# ---------------------------------------------------------------------------
+
+
+def mamba_block_specs(cfg):
+    return {"ln": norm_specs(cfg, cfg.d_model), "ssm": ssm_mod.ssm_specs(cfg)}
+
+
+def mamba_block(cfg, p, x, state=None):
+    h = apply_norm(cfg, p["ln"], x)
+    out, new_state = ssm_mod.apply_ssm(cfg, p["ssm"], h, state)
+    return x + out, new_state
+
+
+def mlstm_block_specs(cfg):
+    return {"ln": norm_specs(cfg, cfg.d_model),
+            "mlstm": xlstm_mod.mlstm_specs(cfg)}
+
+
+def mlstm_block(cfg, p, x, state=None):
+    h = apply_norm(cfg, p["ln"], x)
+    out, new_state = xlstm_mod.apply_mlstm(cfg, p["mlstm"], h, state)
+    return x + out, new_state
+
+
+def slstm_block_specs(cfg):
+    return {"ln": norm_specs(cfg, cfg.d_model),
+            "slstm": xlstm_mod.slstm_specs(cfg)}
+
+
+def slstm_block(cfg, p, x, state=None):
+    h = apply_norm(cfg, p["ln"], x)
+    out, new_state = xlstm_mod.apply_slstm(cfg, p["slstm"], h, state)
+    return x + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def maybe_scan(f, init, xs):
+    """lax.scan that honors unroll mode (see unrollctl)."""
+    from repro.models import unrollctl
+    if not unrollctl.enabled():
+        return jax.lax.scan(f, init, xs)
+    L = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    take = lambda t, i: jax.tree_util.tree_map(lambda a: a[i], t)
+    carry, ys = init, []
+    for i in range(L):
+        carry, y = f(carry, take(xs, i))
+        ys.append(y)
+    ys = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    return carry, ys
+
+
+def scan_stack(cfg, body, x, stacked_params, stacked_cache=None):
+    """Scan body(x, p, c) -> (x, new_c, aux) over the layer dim.
+
+    Unroll mode (cost probes / cfg.scan_layers=False) runs a python loop
+    over the same stacked params so every layer's ops appear in HLO."""
+    def f(carry, inp):
+        p, c = inp
+        x_new, c_new, aux = body(carry, p, c)
+        return x_new, (c_new, aux)
+
+    f = _maybe_remat(cfg, f)
+
+    from repro.models import unrollctl
+    if unrollctl.enabled() or not cfg.scan_layers:
+        L = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+        take = lambda t, i: jax.tree_util.tree_map(lambda a: a[i], t)
+        caches, auxs = [], []
+        for i in range(L):
+            c = None if stacked_cache is None else take(stacked_cache, i)
+            x, (c_new, aux) = f(x, (take(stacked_params, i), c))
+            caches.append(c_new)
+            auxs.append(aux)
+        new_cache = None if caches[0] is None else \
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+        return x, new_cache, sum(auxs)
+
+    x, (new_cache, auxs) = jax.lax.scan(f, x, (stacked_params, stacked_cache))
+    return x, new_cache, jnp.sum(auxs)
+
+
+# ----- homogeneous decoder (dense / moe / vlm) ------------------------------
+
+
+def uniform_stack_specs(cfg):
+    block = attn_block_specs(cfg, use_moe=cfg.moe is not None)
+    return stack_specs(block, cfg.n_layers)
+
+
+def uniform_stack_train(cfg, params, x, positions, *, impl="flash",
+                        collect_kv=False, max_len=None):
+    ml = max_len or positions.shape[0]
+
+    def body(x, p, _):
+        x, kv, aux = attn_block_train(cfg, p, x, positions, impl=impl)
+        if collect_kv:
+            cache = attn.fill_kv_cache(
+                cfg, attn.init_kv_cache(cfg, x.shape[0], ml, x.dtype),
+                kv[0], kv[1])
+        else:
+            cache = None
+        return x, cache, aux
+
+    return scan_stack(cfg, body, x, params, None)
+
+
+def uniform_stack_decode(cfg, params, x, pos, cache):
+    def body(x, p, c):
+        return attn_block_decode(cfg, p, x, pos, c)
+
+    return scan_stack(cfg, body, x, params, cache)
+
+
+# ----- xLSTM stack ----------------------------------------------------------
+
+
+def xlstm_group_layout(cfg):
+    """(n_groups, mlstm_per_group) — one sLSTM closes each group."""
+    every = cfg.xlstm.slstm_every
+    assert cfg.n_layers % every == 0, (cfg.n_layers, every)
+    return cfg.n_layers // every, every - 1
+
+
+def xlstm_stack_specs(cfg):
+    g, m = xlstm_group_layout(cfg)
+    group = {"mlstm": stack_specs(mlstm_block_specs(cfg), m, "inner"),
+             "slstm": slstm_block_specs(cfg)}
+    return stack_specs(group, g, "layers")
+
+
+def xlstm_stack_apply(cfg, params, x, state=None):
+    """Works for train (state=None -> zero states consumed, states
+    returned) and decode/prefill-continuation (state given)."""
+    B = x.shape[0]
+    zero = state is None
+
+    def group_body(x, p, c):
+        if zero:
+            c = {"mlstm": jax.tree_util.tree_map(
+                     lambda s: jnp.broadcast_to(
+                         s, (p_inner_len,) + s.shape),
+                     xlstm_mod.init_mlstm_state(cfg, B)),
+                 "slstm": xlstm_mod.init_slstm_state(cfg, B)}
+
+        def inner(x, ip, ic):
+            x, st = mlstm_block(cfg, ip, x, ic)
+            return x, st, jnp.zeros((), jnp.float32)
+
+        x, m_states, _ = scan_stack(cfg, inner, x, p["mlstm"], c["mlstm"])
+        x, s_state = slstm_block(cfg, p["slstm"], x, c["slstm"])
+        return x, {"mlstm": m_states, "slstm": s_state}, \
+            jnp.zeros((), jnp.float32)
+
+    g, p_inner_len = xlstm_group_layout(cfg)
+    x, new_state, _ = scan_stack(cfg, group_body, x, params,
+                                 None if zero else state)
+    return x, new_state, jnp.zeros((), jnp.float32)
+
+
+def xlstm_state_specs(cfg, batch):
+    g, m = xlstm_group_layout(cfg)
+    group = {"mlstm": stack_specs(xlstm_mod.mlstm_state_specs(cfg, batch),
+                                  m, "inner"),
+             "slstm": xlstm_mod.slstm_state_specs(cfg, batch)}
+    return stack_specs(group, g, "layers")
+
+
+def xlstm_init_state(cfg, batch):
+    g, m = xlstm_group_layout(cfg)
+
+    def rep(t, n):
+        return jax.tree_util.tree_map(
+            lambda s: jnp.broadcast_to(s, (n,) + s.shape).copy(), t)
+
+    group = {"mlstm": rep(xlstm_mod.init_mlstm_state(cfg, batch), m),
+             "slstm": xlstm_mod.init_slstm_state(cfg, batch)}
+    return rep(group, g)
+
+
+# ----- zamba2 hybrid stack --------------------------------------------------
+
+
+def zamba_layout(cfg):
+    g = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers - g * cfg.attn_every
+    return g, cfg.attn_every, tail
+
+
+def zamba_stack_specs(cfg):
+    g, per, tail = zamba_layout(cfg)
+    sp = {
+        "groups": stack_specs(
+            {"mamba": stack_specs(mamba_block_specs(cfg), per, "inner")},
+            g, "layers"),
+        "shared_attn": attn_block_specs(cfg),
+        "shared_proj": ParamSpec((2 * cfg.d_model, cfg.d_model),
+                                 ("embed", None), fan_in=2 * cfg.d_model),
+    }
+    if tail:
+        sp["tail"] = stack_specs(mamba_block_specs(cfg), tail, "layers")
+    return sp
+
+
+def _zamba_shared_in(cfg, p, x, x0):
+    h = jnp.concatenate([x, x0], axis=-1)
+    return jnp.einsum("...e,ed->...d", h, p["shared_proj"].astype(x.dtype))
+
+
+def zamba_stack_train(cfg, params, x, positions, *, impl="flash",
+                      collect=False, max_len=None):
+    """Returns (x, cache, aux). cache collects ssm states (+kv if collect)."""
+    x0 = x
+    B, S = x.shape[0], x.shape[1]
+    ml = max_len or S
+
+    def group_body(x, p, _):
+        def inner(x, ip, _c):
+            x, st = mamba_block(cfg, ip, x, None)
+            return x, st if collect else None, jnp.zeros((), jnp.float32)
+
+        x, m_states, _ = scan_stack(cfg, inner, x, p["mamba"], None)
+        h = _zamba_shared_in(cfg, params, x, x0)
+        h, kv, aux = attn_block_train(cfg, params["shared_attn"], h,
+                                      positions, impl=impl)
+        x = x + h
+        cache = None
+        if collect:
+            kvc = attn.fill_kv_cache(
+                attn_cfg_for_shared(cfg),
+                attn.init_kv_cache(attn_cfg_for_shared(cfg), B, ml, x.dtype),
+                kv[0], kv[1])
+            cache = {"mamba": m_states, "attn": kvc}
+        return x, cache, aux
+
+    g, per, tail = zamba_layout(cfg)
+    x, gcache, aux = scan_stack(cfg, group_body, x, params["groups"], None)
+    tcache = None
+    if tail:
+        def tail_body(x, p, _):
+            x, st = mamba_block(cfg, p, x, None)
+            return x, st if collect else None, jnp.zeros((), jnp.float32)
+        x, tcache, _ = scan_stack(cfg, tail_body, x, params["tail"], None)
+    cache = {"groups": gcache, "tail": tcache} if collect else None
+    return x, cache, aux
+
+
+def attn_cfg_for_shared(cfg):
+    return cfg          # shared attn uses the same dims; no SWA
+
+
+def zamba_stack_decode(cfg, params, x, pos, cache):
+    x0 = x
+
+    def group_body(x, p_c):
+        p, c = p_c
+
+        def inner(x, inp):
+            ip, ic = inp
+            y, st = mamba_block(cfg, ip, x[:, None], ic)
+            return y[:, 0], st
+
+        x, m_states = maybe_scan(inner, x, (p["mamba"], c["mamba"]))
+        h = _zamba_shared_in(cfg, params, x, x0)
+        h, kvc, aux = attn_block_decode(cfg, params["shared_attn"], h, pos,
+                                        c["attn"])
+        x = x + h
+        return x, ({"mamba": m_states, "attn": kvc}, aux)
+
+    f = _maybe_remat(cfg, group_body)
+    x, (gcache, auxs) = maybe_scan(
+        lambda carry, inp: f(carry, inp), x,
+        (params["groups"], cache["groups"]))
+    tcache = None
+    if cache.get("tail") is not None:
+        def tail_body(x, inp):
+            p, c = inp
+            y, st = mamba_block(cfg, p, x[:, None], c)
+            return y[:, 0], st
+        x, tcache = maybe_scan(tail_body, x,
+                               (params["tail"], cache["tail"]))
+    return x, {"groups": gcache, "tail": tcache}, jnp.sum(auxs)
+
+
+# ----- whisper enc-dec stack ------------------------------------------------
+
+
+def whisper_specs(cfg):
+    enc_block = attn_block_specs(cfg)
+    dec_block = attn_block_specs(cfg, cross=True)
+    return {
+        "enc": stack_specs(enc_block, cfg.enc_layers),
+        "dec": stack_specs(dec_block, cfg.dec_layers),
+        "enc_pos": ParamSpec((cfg.n_frames, cfg.d_model), (None, "embed"),
+                             "pos"),
+        "enc_norm": norm_specs(cfg, cfg.d_model),
+    }
+
+
+def whisper_encode(cfg, params, frames):
+    """frames: (B, F, D) precomputed embeddings (conv frontend stub)."""
+    x = frames.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + params["enc_pos"].astype(x.dtype)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, p, _):
+        x, _, aux = attn_block_train(cfg, p, x, positions, causal=False)
+        return x, None, aux
+
+    x, _, _ = scan_stack(cfg, body, x, params["enc"], None)
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def whisper_decode_train(cfg, params, enc_out, x, positions, *,
+                         impl="flash", collect_kv=False, max_len=None):
+    B, S = x.shape[0], x.shape[1]
+    ml = max_len or S
+
+    def body(x, p, _):
+        x, kv, aux = attn_block_train(cfg, p, x, positions, impl=impl,
+                                      enc_out=enc_out)
+        cache = None
+        if collect_kv:
+            kvc = attn.fill_kv_cache(
+                cfg, attn.init_kv_cache(cfg, B, ml, x.dtype), kv[0], kv[1])
+            ek = jnp.einsum("bfd,dhk->bfhk", enc_out,
+                            p["xattn"]["wk"].astype(enc_out.dtype))
+            ev = jnp.einsum("bfd,dhk->bfhk", enc_out,
+                            p["xattn"]["wv"].astype(enc_out.dtype))
+            cache = {"self": kvc, "cross": {"k": ek, "v": ev}}
+        return x, cache, aux
+
+    return scan_stack(cfg, body, x, params["dec"], None)
+
+
+def whisper_stack_decode(cfg, params, x, pos, cache):
+    def body(x, p, c):
+        x, new_self, aux = attn_block_decode(cfg, p, x, pos, c["self"],
+                                             cross_kv=c["cross"])
+        return x, {"self": new_self, "cross": c["cross"]}, aux
+
+    return scan_stack(cfg, body, x, params["dec"], cache)

@@ -1,0 +1,28 @@
+"""Unroll control for cost-probe lowering.
+
+XLA cost_analysis counts while-loop bodies once; probe lowerings enable
+unroll mode so every layer / attention block / mLSTM chunk appears
+literally in the HLO and is counted.  Never enabled in production paths
+(the scanned lowering is what ships); only launch/dryrun probe cells set
+it.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL = False
+
+
+def enabled() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def unrolled():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev

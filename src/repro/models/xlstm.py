@@ -1,0 +1,285 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-
+parallel) and sLSTM (scalar memory, strictly recurrent).
+
+mLSTM cell (stabilized, per head):
+    i_t = exp(~i_t),  f_t = sigmoid-or-exp(~f_t)   (log-space here)
+    C_t = f_t C_{t-1} + i_t v_t k_t^T      (matrix memory, Dh x Dh)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+We run the chunkwise-parallel form (same trick as SSD/GLA): within a
+chunk, weights w_tj = exp(cumF_t - cumF_j + logi_j) form a lower-
+triangular attention-like matrix; across chunks the (C, n) state is
+carried by a short lax.scan.  Max-stabilization keeps exp() bounded.
+
+sLSTM is sequential by construction (recurrent h_{t-1} feeds the gates),
+so prefill scans over time — this is faithful to the paper (sLSTM blocks
+trade parallelism for state-tracking ability; xlstm-1.3b has 1 sLSTM per
+8 blocks so the cost is bounded).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, apply_norm, ashard, norm_specs
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_dims(cfg):
+    """(d_inner, H, Dv, Dqk): block-diagonal per-head projections with
+    half-dim q/k (official xLSTM-1.3b structure)."""
+    x = cfg.xlstm
+    d_inner = x.mlstm_expand * cfg.d_model
+    H = cfg.n_heads
+    Dv = d_inner // H
+    return d_inner, H, Dv, max(Dv // 2, 1)
+
+
+def mlstm_specs(cfg):
+    d = cfg.d_model
+    d_inner, H, Dv, Dqk = mlstm_dims(cfg)
+    return {
+        "w_up": ParamSpec((d, 2 * d_inner), ("embed", "mlp")),   # [x_in, z]
+        "wq": ParamSpec((H, Dv, Dqk), ("heads", None, None), fan_in=Dv),
+        "wk": ParamSpec((H, Dv, Dqk), ("heads", None, None), fan_in=Dv),
+        "wv": ParamSpec((H, Dv, Dv), ("heads", None, None), fan_in=Dv),
+        "w_if": ParamSpec((d_inner, 2 * H), ("mlp", None)),      # gates
+        "b_if": ParamSpec((2 * H,), (None,), "zeros"),
+        "norm_scale": ParamSpec((d_inner,), ("mlp",), "ones"),
+        "w_down": ParamSpec((d_inner, d), ("mlp", "embed")),
+    }
+
+
+def _mlstm_chunked(q, k, v, logi, logf, chunk, state=None):
+    """q,k,v: (B,T,H,Dh) f32; logi/logf: (B,T,H) f32 (log gates).
+
+    Returns h (B,T,H,Dh), new_state (C (B,H,Dh,Dh), n (B,H,Dh), m (B,H)).
+    """
+    B, T, H, Dqk = q.shape
+    Dv = v.shape[-1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:  # logi=-inf (no contribution), logf=0 (no decay) on padding
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=_NEG)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+    T_pad = T + pad
+    nc = T_pad // chunk
+    scale = Dqk ** -0.5
+    q = q * scale
+
+    qc = q.reshape(B, nc, chunk, H, Dqk)
+    kc = k.reshape(B, nc, chunk, H, Dqk)
+    vc = v.reshape(B, nc, chunk, H, Dv)
+    lic = logi.reshape(B, nc, chunk, H).transpose(0, 1, 3, 2)   # (B,nc,H,L)
+    lfc = logf.reshape(B, nc, chunk, H).transpose(0, 1, 3, 2)
+
+    cumf = jnp.cumsum(lfc, axis=-1)                              # (B,nc,H,L)
+    # log weight of source j at target t (within chunk, j <= t):
+    #   cumf_t - cumf_j + logi_j
+    lw = (cumf[..., :, None] - cumf[..., None, :] + lic[..., None, :])
+    L = chunk
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    lw = jnp.where(mask, lw, _NEG)
+
+    # chunk-state log weights: contribution of j to end-of-chunk state
+    lw_state = cumf[..., -1:] - cumf + lic                       # (B,nc,H,L)
+    # inter-chunk: state entering chunk c decays by cumf_t within chunk
+    lw_in = cumf                                                  # (B,nc,H,L)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, Dqk, Dv), jnp.float32)
+        n0 = jnp.zeros((B, H, Dqk), jnp.float32)
+        m0 = jnp.full((B, H), _NEG, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    # ---- sequential pass over chunks (carries C, n, m) --------------------
+    def step(carry, inp):
+        C_prev, n_prev, m_prev = carry
+        qb, kb, vb, lwb, lwsb, lwib, cumfb = inp
+        # stabilizer: max over intra weights and inherited state magnitude
+        m_intra = lwb.max(-1)                                    # (B,H,L)
+        m_t = jnp.maximum(m_prev[..., None] + cumfb, m_intra)    # (B,H,L)
+        # intra-chunk
+        w = jnp.exp(lwb - m_t[..., None])                        # (B,H,L,L)
+        scores = jnp.einsum("bthd,bshd->bhts", qb, kb)           # (B,H,L,L)
+        num_intra = jnp.einsum("bhts,bhts,bshd->bthd",
+                               scores, w, vb)
+        den_intra = jnp.einsum("bhts,bhts->bth", scores, w)
+        # inter-chunk (state from previous chunks)
+        decay_in = jnp.exp(lwib + m_prev[..., None] - m_t)       # (B,H,L)
+        num_inter = jnp.einsum("bthd,bhde,bht->bthe",
+                               qb, C_prev, decay_in)
+        den_inter = jnp.einsum("bthd,bhd,bht->bth",
+                               qb, n_prev, decay_in)
+        num = num_intra + num_inter                              # (B,L,H,Dh)
+        den = den_intra + den_inter                              # (B,L,H)
+        floor = jnp.exp(-m_t).transpose(0, 2, 1)                 # (B,L,H)
+        h = num / jnp.maximum(jnp.abs(den), floor)[..., None]
+        # ---- update state to end of chunk
+        m_end = jnp.maximum(m_prev + cumfb[..., -1], lwsb.max(-1))
+        ws = jnp.exp(lwsb - m_end[..., None])                    # (B,H,L)
+        C_new = (C_prev * jnp.exp(m_prev + cumfb[..., -1]
+                                  - m_end)[..., None, None]
+                 + jnp.einsum("bht,bthd,bthe->bhde", ws, kb, vb))
+        n_new = (n_prev * jnp.exp(m_prev + cumfb[..., -1] - m_end)[..., None]
+                 + jnp.einsum("bht,bthd->bhd", ws, kb))
+        return (C_new, n_new, m_end), h
+
+    xs = (qc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+          vc.transpose(1, 0, 2, 3, 4), lw.transpose(1, 0, 2, 3, 4),
+          lw_state.transpose(1, 0, 2, 3), lw_in.transpose(1, 0, 2, 3),
+          cumf.transpose(1, 0, 2, 3))
+    from repro.models import unrollctl
+    if unrollctl.enabled():
+        carry, hs_list = (C0, n0, m0), []
+        for i in range(nc):
+            carry, hh = step(carry, jax.tree_util.tree_map(
+                lambda a: a[i], xs))
+            hs_list.append(hh)
+        Cf, nf, mf = carry
+        hs = jnp.stack(hs_list)
+    else:
+        (Cf, nf, mf), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, T_pad, H, Dv)
+    return h[:, :T], {"C": Cf, "n": nf, "m": mf}
+
+
+def apply_mlstm(cfg, p, x, state=None):
+    """mLSTM block. x: (B,T,D) -> (out, new_state)."""
+    d_inner, H, Dv, Dqk = mlstm_dims(cfg)
+    cdt = x.dtype
+    up = jnp.einsum("btd,de->bte", x, p["w_up"].astype(cdt))
+    xin, z = jnp.split(up, 2, axis=-1)
+    xin = ashard(xin, "batch", "seq", "mlp")
+    xh = xin.reshape(*xin.shape[:2], H, Dv)      # per-head stream
+    q = jnp.einsum("bthe,hed->bthd", xh, p["wq"].astype(cdt))
+    k = jnp.einsum("bthe,hed->bthd", xh, p["wk"].astype(cdt))
+    v = jnp.einsum("bthe,hed->bthd", xh, p["wv"].astype(cdt))
+    gates = (jnp.einsum("bte,eg->btg", xin, p["w_if"].astype(cdt))
+             + p["b_if"].astype(cdt)).astype(jnp.float32)
+    logi, logf_raw = jnp.split(gates, 2, axis=-1)                # (B,T,H)
+    logf = jax.nn.log_sigmoid(logf_raw)
+
+    h, new_state = _mlstm_chunked(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), logi, logf, cfg.xlstm.mlstm_chunk, state)
+    h = h.reshape(*h.shape[:2], d_inner).astype(cdt)
+    h = rms_gate(h, z, p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", h, p["w_down"].astype(cdt))
+    return out, new_state
+
+
+def rms_gate(h, z, scale):
+    from repro.models.layers import rms_norm
+    return rms_norm(h, scale) * jax.nn.silu(z)
+
+
+def init_mlstm_state(cfg, batch, dtype=jnp.float32):
+    d_inner, H, Dv, Dqk = mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, H, Dqk, Dv), jnp.float32),
+            "n": jnp.zeros((batch, H, Dqk), jnp.float32),
+            "m": jnp.full((batch, H), _NEG, jnp.float32)}
+
+
+def mlstm_state_specs(cfg, batch):
+    d_inner, H, Dv, Dqk = mlstm_dims(cfg)
+    return {"C": ParamSpec((batch, H, Dqk, Dv),
+                           ("batch", "heads", None, None), "zeros",
+                           jnp.float32),
+            "n": ParamSpec((batch, H, Dqk), ("batch", "heads", None),
+                           "zeros", jnp.float32),
+            "m": ParamSpec((batch, H), ("batch", "heads"), "zeros",
+                           jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_dims(cfg):
+    H = cfg.n_heads
+    return H, cfg.d_model // H
+
+
+def slstm_specs(cfg):
+    d = cfg.d_model
+    H, Dh = slstm_dims(cfg)
+    return {
+        # 4 gates (i, f, z, o) from input and recurrent h (block-diag/head)
+        "w_x": ParamSpec((d, H, 4 * Dh), ("embed", "heads", None), fan_in=d),
+        "r_h": ParamSpec((H, Dh, 4 * Dh), ("heads", None, None), fan_in=Dh),
+        "bias": ParamSpec((H, 4 * Dh), ("heads", None), "zeros"),
+        "norm_scale": ParamSpec((d,), ("embed",), "ones"),
+        "w_down": ParamSpec((d, d), ("embed", "embed_out")),
+    }
+
+
+def _slstm_cell(p, xg, state):
+    """xg: (B, H, 4Dh) f32 gate pre-activations. States all f32 (the
+    scan carry must be dtype-stable)."""
+    c, n, m, h = state
+    rg = jnp.einsum("bhd,hdg->bhg", h, p["r_h"].astype(jnp.float32))
+    g = xg + rg + p["bias"].astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + m, gi)
+    i = jnp.exp(gi - m_new)
+    f = jnp.exp(logf + m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def apply_slstm(cfg, p, x, state=None):
+    """sLSTM block: sequential scan over time. x: (B,T,D)."""
+    B, T, D = x.shape
+    H, Dh = slstm_dims(cfg)
+    cdt = x.dtype
+    xg_all = jnp.einsum("btd,dhg->bthg", x,
+                        p["w_x"].astype(cdt)).astype(jnp.float32)
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    state = tuple(state[k].astype(jnp.float32)
+                  for k in ("c", "n", "m", "h"))
+
+    def step(carry, xg):
+        new = _slstm_cell(p, xg, carry)
+        return new, new[3]
+
+    (c, n, m, h), hs = jax.lax.scan(step, state,
+                                    xg_all.transpose(1, 0, 2, 3))
+    out = hs.transpose(1, 0, 2, 3).reshape(B, T, D).astype(cdt)
+    from repro.models.layers import rms_norm
+    out = rms_norm(out, p["norm_scale"])
+    out = jnp.einsum("btd,de->bte", out, p["w_down"].astype(cdt))
+    new_state = {"c": c, "n": n, "m": m, "h": h}
+    return out, new_state
+
+
+def init_slstm_state(cfg, batch, dtype=jnp.float32):
+    H, Dh = slstm_dims(cfg)
+    z = lambda: jnp.zeros((batch, H, Dh), jnp.float32)
+    return {"c": z(), "n": z(), "m": jnp.full((batch, H, Dh), 0.0,
+                                              jnp.float32), "h": z()}
+
+
+def slstm_state_specs(cfg, batch):
+    H, Dh = slstm_dims(cfg)
+    sp = ParamSpec((batch, H, Dh), ("batch", "heads", None), "zeros",
+                   jnp.float32)
+    return {"c": sp, "n": sp, "m": sp, "h": sp}

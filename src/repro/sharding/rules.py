@@ -1,0 +1,163 @@
+"""Logical-axis sharding rules -> PartitionSpec, divisibility-aware.
+
+Two rule tables, because the same logical name means different things on
+weights and activations:
+
+  * weight rules — "embed" shards over the data axes (ZeRO-3/FSDP:
+    weights gathered just-in-time per layer under the scan), "mlp",
+    "heads", "vocab" shard over the model axis (TP).
+  * activation rules — "batch" over (pod, data); head/mlp/vocab dims
+    over model; "embed" replicated (activations are batch-sharded, not
+    feature-sharded, except where SP is enabled).
+
+Every rule application checks divisibility and axis-reuse: a dim that
+doesn't divide (e.g. xlstm's 4 heads on a 16-way model axis) silently
+falls back to replication — per-arch correctness beats a crash, and the
+roofline table makes the cost of the fallback visible.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.models.layers import (is_spec, set_activation_sharder,
+                                 tree_map_specs)
+
+DATA_AXES = ("pod", "data")      # FSDP/DP axes (pod present on multi-pod)
+MODEL_AXIS = "model"
+
+
+def _present(mesh: Mesh, names) -> tuple:
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def default_weight_rules(mesh: Mesh) -> dict:
+    fsdp = _present(mesh, DATA_AXES)
+    return {
+        "embed": fsdp,
+        "mlp": MODEL_AXIS,
+        "heads": MODEL_AXIS,
+        "kv_heads": MODEL_AXIS,
+        "vocab": MODEL_AXIS,
+        "experts": None,
+        "layers": None,
+        "inner": None,
+        "embed_out": None,
+        # state/cache logical names that can appear in spec trees
+        "batch": fsdp,
+        "kv_seq": MODEL_AXIS,
+        "seq": None,
+    }
+
+
+def default_act_rules(mesh: Mesh) -> dict:
+    batch = _present(mesh, DATA_AXES)
+    return {
+        "batch": batch,
+        "seq": None,
+        "embed": None,
+        "heads": MODEL_AXIS,
+        "kv_heads": MODEL_AXIS,
+        "mlp": MODEL_AXIS,
+        "vocab": MODEL_AXIS,
+        "experts": None,
+        "kv_seq": MODEL_AXIS,
+    }
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    weight: dict
+    act: dict
+
+    def spec(self, shape, logical, table) -> P:
+        used: set = set()
+        parts = []
+        for dim, name in zip(shape, logical):
+            axes = table.get(name) if name is not None else None
+            if axes is None:
+                parts.append(None)
+                continue
+            if isinstance(axes, str):
+                axes = (axes,)
+            axes = tuple(a for a in axes if a in self.mesh.axis_names
+                         and a not in used)
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            if not axes or size == 1 or dim % size != 0:
+                parts.append(None)
+                continue
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    def weight_spec(self, shape, logical) -> P:
+        return self.spec(shape, logical, self.weight)
+
+    def act_spec(self, shape, logical) -> P:
+        return self.spec(shape, logical, self.act)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_rules(mesh: Mesh, *, seq_shard_acts: bool = False,
+               fsdp: bool = True) -> ShardingRules:
+    w = default_weight_rules(mesh)
+    a = default_act_rules(mesh)
+    if not fsdp:
+        w["embed"] = None
+        w["batch"] = _present(mesh, DATA_AXES)
+    if seq_shard_acts:                       # sequence parallelism (§Perf)
+        a["seq"] = MODEL_AXIS
+    return ShardingRules(mesh, w, a)
+
+
+# ---------------------------------------------------------------------------
+# Tree helpers
+# ---------------------------------------------------------------------------
+
+
+def spec_tree_shardings(rules: ShardingRules, spec_tree):
+    """ParamSpec tree -> NamedSharding tree (weight rules)."""
+    return tree_map_specs(
+        lambda s: rules.named(rules.weight_spec(s.shape, s.logical)),
+        spec_tree)
+
+
+def spec_tree_pspecs(rules: ShardingRules, spec_tree):
+    return tree_map_specs(
+        lambda s: rules.weight_spec(s.shape, s.logical), spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context
+# ---------------------------------------------------------------------------
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: Optional[ShardingRules] = None):
+    """Within this context, models' ashard() calls emit
+    with_sharding_constraint and decode dispatch sees the mesh."""
+    rules = rules or make_rules(mesh)
+
+    def shard_fn(x, logical):
+        spec = rules.act_spec(x.shape, logical)
+        return jax.lax.with_sharding_constraint(x, rules.named(spec))
+
+    set_activation_sharder(shard_fn)
+    tfm.set_current_mesh(mesh)
+    try:
+        yield rules
+    finally:
+        set_activation_sharder(None)
+        tfm.set_current_mesh(None)

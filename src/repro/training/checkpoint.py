@@ -1,0 +1,137 @@
+"""Fault-tolerant checkpointing: atomic, async, resumable.
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json, plus <dir>/LATEST
+pointing at the newest COMPLETE checkpoint.  Writes go to a tmp dir
+that is os.replace()'d into place — a host dying mid-write can never
+corrupt the restore path (restore reads LATEST, which is updated last).
+
+`AsyncCheckpointer` moves serialization off the training thread: save()
+snapshots device arrays to host (blocking only for the device->host
+copy) and a worker thread does the npz write.  wait() drains before
+exit / before the next save of the same step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra_meta: Optional[dict] = None) -> str:
+    """Blocking atomic save. Returns the checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": step, "num_leaves": len(leaves),
+            "treedef": str(treedef), "time": time.time()}
+    meta.update(extra_meta or {})
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # LATEST updated last => always points at a complete checkpoint
+    latest_tmp = os.path.join(directory, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(latest_tmp, os.path.join(directory, "LATEST"))
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(directory, name)):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore_checkpoint(directory: str, tree_like: Any,
+                       step: Optional[int] = None):
+    """Restore into the structure of `tree_like`. Returns (tree, step).
+    tree_like may contain ShapeDtypeStructs (no allocation needed)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:09d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten(tree_like)
+    assert len(leaves) == len(data.files), \
+        f"checkpoint has {len(data.files)} leaves, model wants {len(leaves)}"
+    restored = [data[f"a{i}"] for i in range(len(leaves))]
+    for want, got in zip(leaves, restored):
+        assert tuple(want.shape) == tuple(got.shape), (want.shape, got.shape)
+    return jax.tree_util.tree_unflatten(treedef, restored), step
+
+
+def prune_old(directory: str, keep: int = 3) -> None:
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:09d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer (one in flight at a time)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree, meta = item
+            try:
+                save_checkpoint(self.directory, step, tree, meta)
+                prune_old(self.directory, self.keep)
+            except BaseException as e:   # surfaced on next save()/wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None):
+        if self._err:
+            raise self._err
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # D2H now
+        self._q.put((step, host_tree, meta))
+
+    def wait(self):
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._t.join(timeout=10)

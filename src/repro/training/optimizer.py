@@ -1,0 +1,98 @@
+"""Optimizers (self-contained — no optax dependency).
+
+AdamW with dtype-configurable moments: 314B-class configs use bf16
+moments (state_dtype in the arch config) to fit 16 GB/chip; master
+params stay in the param dtype.  The optimizer state tree mirrors the
+param tree, so param shardings apply verbatim (m, v inherit the ZeRO-3
+layout for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"
+    clip_norm: float = 1.0
+    schedule: Optional[Callable] = None     # step -> lr multiplier
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree_util.tree_map(zeros, params),
+                          jax.tree_util.tree_map(zeros, params))
+
+    def init_abstract(self, abstract_params) -> AdamWState:
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+        return AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                          jax.tree_util.tree_map(zeros, abstract_params),
+                          jax.tree_util.tree_map(zeros, abstract_params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        g32 = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm:
+            gn = global_norm(g32)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-9))
+            g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+
+        dt = jnp.dtype(self.state_dtype)
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, v, p):
+            m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+            mhat = m32 / (1 - b1 ** step.astype(jnp.float32))
+            vhat = v32 / (1 - b2 ** step.astype(jnp.float32))
+            lr = self.lr * (self.schedule(step) if self.schedule else 1.0)
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:    # decay matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m32.astype(dt), v32.astype(dt)
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(g32)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        out = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step, new_m, new_v)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def cosine_schedule(warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * cos
+    return fn

@@ -1,0 +1,90 @@
+"""Training step factory: grad-accum microbatching, remat, compression.
+
+`make_train_step` returns the function the dry-run lowers and the real
+trainer executes — identical code path, which is the point: the compiled
+artifact analyzed in §Roofline IS the production step.
+
+Microbatching (`accum_steps > 1`) reshapes the global batch to
+(accum, B/accum, S) and lax.scan's the fwd+bwd, psum-ing gradients into
+an accumulator.  XLA overlaps the per-microbatch gradient reductions
+with the next microbatch's compute (the standard DP overlap trick).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.training.optimizer import AdamW, global_norm
+from repro.training import compression
+
+
+def make_loss_fn(cfg, impl: str = "flash"):
+    def loss_fn(params, batch):
+        return M.forward_train(cfg, params, batch, impl=impl)
+    return loss_fn
+
+
+def make_train_step(cfg, opt: AdamW, *, impl: str = "flash",
+                    accum_steps: int = 1,
+                    compress_grads: bool = False,
+                    donate: bool = True) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    loss_fn = make_loss_fn(cfg, impl)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return acc, (l, m["aux_loss"])
+
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, auxes) = jax.lax.scan(micro, zero, mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / accum_steps, grads)
+            loss = losses.mean()
+            metrics = {"loss": loss, "aux_loss": auxes.mean(),
+                       "tokens": jnp.array(
+                           batch["tokens"].shape[0]
+                           * (batch["tokens"].shape[1] - 1))}
+
+        if compress_grads:
+            grads = compression.int8_roundtrip(grads)
+
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = global_norm(grads)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def jit_train_step(cfg, opt: AdamW, mesh, rules, **kw):
+    """jit with explicit in/out shardings (the dry-run entry point)."""
+    from repro.sharding import spec_tree_shardings
+    step = make_train_step(cfg, opt, **kw)
+    pshard = spec_tree_shardings(rules, M.param_specs(cfg))
+    ostate = AdamWState_shardings(opt, pshard, rules)
+    dshard = rules.named(rules.act_spec((1, 1), ("batch", "seq")))
+    in_sh = (pshard, ostate, {"tokens": dshard})
+    return jax.jit(step, in_shardings=in_sh,
+                   out_shardings=(pshard, ostate, None),
+                   donate_argnums=(0, 1))
+
+
+def AdamWState_shardings(opt, param_shardings, rules):
+    from repro.training.optimizer import AdamWState
+    none_sh = rules.named(jax.sharding.PartitionSpec())
+    return AdamWState(none_sh, param_shardings, param_shardings)

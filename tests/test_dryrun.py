@@ -1,0 +1,105 @@
+"""Dry-run machinery tests.
+
+The full 40-cell x 2-mesh sweep runs via ``python -m repro.launch.dryrun
+--all [--multi-pod]`` (results in artifacts/ and EXPERIMENTS.md); here we
+verify the machinery itself: one real 256-chip cell end-to-end in a
+subprocess (cheap arch), mesh construction, collective parsing, and the
+depth-probe extrapolation math.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_production_mesh_shapes():
+    script = (
+        "import os\n"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=512'\n"
+        "from repro.launch.mesh import make_production_mesh, make_gee_mesh\n"
+        "m1 = make_production_mesh()\n"
+        "m2 = make_production_mesh(multi_pod=True)\n"
+        "m3 = make_gee_mesh(multi_pod=True)\n"
+        "assert dict(m1.shape) == {'data': 16, 'model': 16}, m1.shape\n"
+        "assert dict(m2.shape) == {'pod': 2, 'data': 16, 'model': 16}\n"
+        "assert dict(m3.shape) == {'edges': 512}\n"
+        "print('MESH_OK')\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "MESH_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_one_cell_lowers_and_compiles_256_chips(tmp_path):
+    """h2o-danube long_500k: the cheapest real cell; proves lower +
+    compile + memory/cost analysis + probe extrapolation end-to-end."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "h2o-danube-3-4b", "--shape", "long_500k"],
+        env=env, capture_output=True, text=True, timeout=580,
+        cwd=str(tmp_path))
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    assert "[dryrun] OK" in r.stdout
+
+
+def test_collective_parsing():
+    from repro.launch.roofline import parse_collectives, shape_bytes
+    assert shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert shape_bytes("(f32[2,2], bf16[4])") == 24
+    hlo = """
+  %all-reduce.5 = f32[16,128]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8]
+  %ag = bf16[32,64]{1,0} all-gather(%y), dimensions={0}
+  %cp.2 = f32[8]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %other = f32[4]{0} add(%a, %b)
+"""
+    c = parse_collectives(hlo)
+    assert c["all-reduce"]["count"] == 1
+    assert c["all-reduce"]["wire_bytes"] == 2 * 16 * 128 * 4
+    assert c["all-gather"]["bytes"] == 32 * 64 * 2
+    assert c["collective-permute"]["count"] == 1
+
+
+def test_probe_extrapolation_math():
+    from repro.launch.analytic import extrapolate
+    u = {"flops": 110.0}     # const 10 + 100/unit
+    u2 = {"flops": 210.0}
+    out = extrapolate(u, u2, n_units=48, tail_units=0.0)
+    assert abs(out["flops"] - (10 + 100 * 48)) < 1e-9
+
+
+def test_probe_units_cover_all_archs():
+    from repro.configs import get_config, list_archs
+    from repro.launch.analytic import probe_unit
+    for arch in list_archs():
+        cfg = get_config(arch)
+        u, u2, n_units, tail = probe_unit(cfg)
+        assert u.n_layers * 2 == u2.n_layers
+        # extrapolation must cover every layer of the real config
+        if cfg.is_encdec:
+            assert n_units == cfg.enc_layers
+        elif cfg.xlstm is not None:
+            assert n_units * cfg.xlstm.slstm_every == cfg.n_layers
+        elif cfg.attn_every:
+            per = cfg.attn_every
+            assert n_units * per + tail * (per + 1) == cfg.n_layers
+        else:
+            assert n_units == cfg.n_layers
+
+
+def test_all_cells_enumerated():
+    """40 total cells; long_500k only for sub-quadratic archs."""
+    from repro.configs import all_cells, get_config, list_archs
+    cells = all_cells()
+    assert len(cells) == 33       # 10*3 + 3 long_500k (xlstm/danube/zamba)
+    skipped = [(a, s) for a in list_archs()
+               for s in get_config(a).skipped_shapes()]
+    assert len(cells) + len(skipped) == 40

@@ -1,0 +1,107 @@
+"""Distributed GEE equivalence on 8 host devices (subprocess so the
+device-count flag never leaks into other tests)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import json
+import numpy as np, jax, jax.numpy as jnp
+from repro.graph.generators import erdos_renyi, powerlaw
+from repro.graph.edges import make_labels
+from repro.core import ref_python as R
+from repro.core.distributed import gee_distributed, edge_mesh
+
+out = {"devices": len(jax.devices())}
+rng = np.random.default_rng(0)
+mesh = edge_mesh()
+for name, g in [
+    ("er", erdos_renyi(1003, 20007, seed=1, weighted=True)),
+    ("skew", powerlaw(512, 8192, seed=2)),
+]:
+    Y = make_labels(g.n, 7, 0.2, rng)
+    Zref = R.gee_numpy(g.u, g.v, g.w, Y, 7, g.n)
+    for mode in ["replicated", "reduce_scatter", "a2a", "ring"]:
+        Z, dropped = gee_distributed(g, Y, K=7, mode=mode, mesh=mesh)
+        out[f"{name}_{mode}_err"] = float(np.abs(Z - Zref).max())
+        out[f"{name}_{mode}_dropped"] = dropped
+# laplacian through the ring
+g = erdos_renyi(500, 6000, seed=3, weighted=True)
+Y = make_labels(g.n, 5, 0.3, rng)
+from repro.core.gee import gee
+Zl_ref = np.asarray(gee(jnp.asarray(g.u), jnp.asarray(g.v),
+                        jnp.asarray(g.w), jnp.asarray(Y), K=5, n=g.n,
+                        laplacian=True))
+Zl, d = gee_distributed(g, Y, K=5, mode="ring", mesh=mesh, laplacian=True)
+out["laplacian_ring_err"] = float(np.abs(Zl - Zl_ref).max())
+out["laplacian_ring_dropped"] = d
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_runs_on_8_devices(dist_results):
+    assert dist_results["devices"] == 8
+
+
+@pytest.mark.parametrize("graph", ["er", "skew"])
+@pytest.mark.parametrize("mode",
+                         ["replicated", "reduce_scatter", "a2a", "ring"])
+def test_mode_matches_serial(dist_results, graph, mode):
+    assert dist_results[f"{graph}_{mode}_err"] < 1e-4
+    assert dist_results[f"{graph}_{mode}_dropped"] == 0
+
+
+def test_laplacian_ring(dist_results):
+    assert dist_results["laplacian_ring_err"] < 1e-4
+    assert dist_results["laplacian_ring_dropped"] == 0
+
+
+def test_prebucketed_steady_state():
+    """a2a_steady (ingestion-time bucketing, per-iteration sort-free) is
+    exact — run in subprocess on 8 devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    script = (
+        "import numpy as np, jax, jax.numpy as jnp\n"
+        "from repro.graph.generators import powerlaw\n"
+        "from repro.graph.edges import make_labels\n"
+        "from repro.core import ref_python as R\n"
+        "from repro.core.distributed import (edge_mesh, prebucket_host,\n"
+        "                                    gee_a2a_steady)\n"
+        "mesh = edge_mesh(); p = 8\n"
+        "g = powerlaw(512, 8192, seed=2)\n"
+        "Y = make_labels(g.n, 7, 0.2, np.random.default_rng(0))\n"
+        "Zref = R.gee_numpy(g.u, g.v, g.w, Y, 7, g.n)\n"
+        "b_dst, b_src, b_w, n_pad = prebucket_host(g, p)\n"
+        "Y_pad = np.full(n_pad, -1, np.int32); Y_pad[:g.n] = Y\n"
+        "cap = b_dst.shape[-1]\n"
+        "Z, _ = gee_a2a_steady(jnp.asarray(b_dst.reshape(p*p, cap)),\n"
+        "                      jnp.asarray(b_src.reshape(p*p, cap)),\n"
+        "                      jnp.asarray(b_w.reshape(p*p, cap)),\n"
+        "                      jnp.asarray(Y_pad), K=7, n_pad=n_pad,\n"
+        "                      mesh=mesh)\n"
+        "Z = np.asarray(Z).reshape(n_pad, 7)[:g.n]\n"
+        "assert np.abs(Z - Zref).max() < 1e-4\n"
+        "print('STEADY_OK')\n")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "STEADY_OK" in r.stdout

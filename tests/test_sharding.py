@@ -1,0 +1,143 @@
+"""Sharding rule unit tests (no multi-device needed: PartitionSpecs are
+pure functions of mesh shape + logical axes)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.models import model as M
+from repro.models.layers import is_spec, tree_map_specs
+from repro.sharding import make_rules
+
+
+class FakeMesh:
+    """Shape-only stand-in (rules never touch devices)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def mesh16x16():
+    return FakeMesh({"data": 16, "model": 16})
+
+
+def mesh2x16x16():
+    return FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_weight_specs_basic():
+    r = make_rules(mesh16x16())
+    assert r.weight_spec((4096, 11008), ("embed", "mlp")) == \
+        P("data", "model")
+    assert r.weight_spec((64000, 4096), ("vocab", "embed")) == \
+        P("model", "data")
+    # stacked layer dim replicated
+    assert r.weight_spec((48, 4096, 11008), ("layers", "embed", "mlp")) == \
+        P(None, "data", "model")
+
+
+def test_multipod_adds_pod_to_fsdp():
+    r = make_rules(mesh2x16x16())
+    assert r.weight_spec((4096, 11008), ("embed", "mlp")) == \
+        P(("pod", "data"), "model")
+
+
+def test_divisibility_fallback():
+    r = make_rules(mesh16x16())
+    # 4 heads cannot shard over 16 -> replicated (xlstm case)
+    assert r.weight_spec((2048, 4, 512), ("embed", "heads", None)) == \
+        P("data")
+    # vocab not divisible by 16 -> replicated
+    assert r.weight_spec((51865, 1024), ("vocab", "embed")) == \
+        P(None, "data")
+
+
+def test_axis_reuse_guard():
+    r = make_rules(mesh16x16())
+    # both dims map to "model"-able names: only the first gets it
+    spec = r.weight_spec((4096, 4096), ("mlp", "vocab"))
+    assert spec == P("model")      # second dim falls back to None
+
+
+def test_activation_rules():
+    r = make_rules(mesh16x16())
+    assert r.act_spec((256, 4096, 4096), ("batch", "seq", "embed")) == \
+        P("data")
+    assert r.act_spec((256, 4096, 32, 128),
+                      ("batch", "seq", "heads", None)) == \
+        P("data", None, "model")
+
+
+def test_seq_parallel_option():
+    r = make_rules(mesh16x16(), seq_shard_acts=True)
+    assert r.act_spec((256, 4096, 4096), ("batch", "seq", "embed")) == \
+        P("data", "model")
+
+
+def test_fsdp_off():
+    r = make_rules(mesh16x16(), fsdp=False)
+    assert r.weight_spec((4096, 11008), ("embed", "mlp")) == \
+        P(None, "model")
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("mesh_fn", [mesh16x16, mesh2x16x16])
+def test_every_param_spec_resolves(arch, mesh_fn):
+    """Every parameter of every arch must map to a valid PartitionSpec
+    with no duplicate mesh axes and correct rank."""
+    cfg = get_config(arch)
+    rules = make_rules(mesh_fn())
+    specs = M.param_specs(cfg)
+
+    def check(s):
+        ps = rules.weight_spec(s.shape, s.logical)
+        flat = []
+        for part in ps:
+            if part is None:
+                continue
+            flat.extend(part if isinstance(part, tuple) else (part,))
+        assert len(flat) == len(set(flat)), (s.shape, s.logical, ps)
+        assert len(ps) <= len(s.shape)
+        # sharded dims must divide
+        for dim, part in zip(s.shape, tuple(ps) + (None,) * 10):
+            if part is None:
+                continue
+            size = int(np.prod([mesh_fn().shape[a] for a in
+                                (part if isinstance(part, tuple)
+                                 else (part,))]))
+            assert dim % size == 0, (s.shape, ps)
+        return ps
+
+    tree_map_specs(check, specs)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-110b", "grok-1-314b"])
+def test_big_models_fit_when_sharded(arch):
+    """Param + optimizer-state bytes per chip under the weight rules must
+    fit the 16 GB HBM budget (the memory-side scale contract)."""
+    cfg = get_config(arch)
+    rules = make_rules(mesh16x16())
+    specs = M.param_specs(cfg)
+    import jax.numpy as jnp
+    pbytes = jnp.dtype(cfg.param_dtype).itemsize
+    sbytes = jnp.dtype(cfg.state_dtype).itemsize
+
+    total = 0.0
+
+    def acc(s):
+        nonlocal total
+        ps = rules.weight_spec(s.shape, s.logical)
+        shards = 1
+        for part in ps:
+            if part is None:
+                continue
+            for a in (part if isinstance(part, tuple) else (part,)):
+                shards *= rules.mesh.shape[a]
+        n = int(np.prod(s.shape)) / shards
+        total += n * (pbytes + 2 * sbytes + 4)   # p + m + v + f32 grad
+        return s
+
+    tree_map_specs(acc, specs)
+    assert total < 16e9, f"{arch}: {total/1e9:.1f} GB/chip"
