@@ -1,0 +1,17 @@
+# One-command entry points (see ROADMAP.md for the tier-1 contract).
+PY := python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test serve-demo bench-serving
+
+# Tier-1 verify: the whole suite, fail-fast.
+test:
+	$(PY) -m pytest -x -q
+
+# Smoke the online embedding service on a small SBM workload.
+serve-demo:
+	$(PY) -m repro.serving.server --n 1000 --edges 20000 --steps 12
+
+# Update-latency vs full re-embed + query throughput (>=1M edges).
+bench-serving:
+	$(PY) -m benchmarks.run --only serving

@@ -8,6 +8,7 @@ Suites:
     fig3     — strong scaling (subprocess device sweep)
     fig4     — Erdős–Rényi edge-count linearity
     kernels  — kernel-path microbenches
+    serving  — online-service update latency vs full re-embed + queries
     roofline — per-cell roofline terms from dry-run artifacts
 """
 from __future__ import annotations
@@ -16,7 +17,7 @@ import argparse
 import sys
 import traceback
 
-SUITES = ("table1", "fig4", "kernels", "fig3", "roofline")
+SUITES = ("table1", "fig4", "kernels", "serving", "fig3", "roofline")
 
 
 def main() -> None:
@@ -38,6 +39,8 @@ def main() -> None:
                 from benchmarks.fig4_edges import run
             elif suite == "kernels":
                 from benchmarks.kernels_bench import run
+            elif suite == "serving":
+                from benchmarks.serving_bench import run
             elif suite == "roofline":
                 from benchmarks.roofline_report import run
             else:

@@ -1,0 +1,67 @@
+"""Serving-path benchmark: incremental update latency vs. full re-embed,
+plus query-kernel throughput, on a >=1M-edge synthetic graph.
+
+The headline row is `serving_speedup`: how much cheaper folding a
+1%-sized edge delta into Z (`gee_apply_delta`, padded to a power-of-two
+bucket exactly as `EmbeddingService` does) is than re-embedding the
+whole graph — the reason the online service exists.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_it
+from repro.core.gee import gee, gee_apply_delta, make_w
+from repro.graph.edges import Graph, make_labels
+from repro.graph.generators import erdos_renyi
+from repro.serving.queries import (class_centroids, gather_embeddings,
+                                   predict_labels, topk_cosine)
+from repro.serving.store import bucket_size
+
+N, K, S = 100_000, 10, 1_500_000
+DELTA_FRAC = 0.01
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    g = erdos_renyi(N, S, seed=0, weighted=True)
+    Y = make_labels(N, K, 0.1, rng)
+    u, v, w = jnp.asarray(g.u), jnp.asarray(g.v), jnp.asarray(g.w)
+    Yj = jnp.asarray(Y)
+
+    # -- full re-embed (the rebuild path) ---------------------------------
+    t_full = time_it(lambda: gee(u, v, w, Yj, K=K, n=N))
+    emit("serving_full_rebuild", t_full, f"s={S}")
+
+    # -- 1% delta via the incremental kernel (padded like the service) ----
+    b = int(S * DELTA_FRAC)
+    batch = Graph(rng.integers(0, N, b).astype(np.int32),
+                  rng.integers(0, N, b).astype(np.int32),
+                  (rng.random(b, dtype=np.float32) + 0.5),
+                  N).pad_to(bucket_size(b))
+    Wv = make_w(Yj, K)
+    Z = gee(u, v, w, Yj, K=K, n=N)
+    du, dv, dw = (jnp.asarray(batch.u), jnp.asarray(batch.v),
+                  jnp.asarray(batch.w))
+    t_delta = time_it(
+        lambda: gee_apply_delta(Z, du, dv, dw, Yj, Wv, K=K))
+    speedup = t_full / t_delta
+    emit("serving_delta_1pct", t_delta, f"batch={b} speedup={speedup:.1f}x")
+    if speedup < 10:
+        print(f"# WARN serving delta speedup {speedup:.1f}x < 10x target")
+
+    # -- query kernels ----------------------------------------------------
+    nodes = jnp.asarray(rng.integers(0, N, 8192).astype(np.int32))
+    t = time_it(lambda: gather_embeddings(Z, nodes))
+    emit("serving_gather_8192", t, f"{8192 / t:,.0f}/s")
+
+    cent = class_centroids(Z, Yj, K=K)
+    pnodes = jnp.asarray(rng.integers(0, N, 4096).astype(np.int32))
+    t = time_it(lambda: predict_labels(Z, cent, pnodes))
+    emit("serving_predict_4096", t, f"{4096 / t:,.0f}/s")
+
+    qnodes = rng.integers(0, N, 256).astype(np.int32)
+    t = time_it(lambda: topk_cosine(Z, qnodes, k=10, block_rows=1 << 15),
+                iters=2)
+    emit("serving_topk_256", t, f"{256 / t:,.0f}/s")

@@ -28,6 +28,8 @@ class Graph:
 
     def validate(self) -> None:
         assert self.u.shape == self.v.shape == self.w.shape
+        if self.s == 0:        # empty edge list (e.g. an empty delta batch)
+            return
         assert self.u.min() >= 0 and self.u.max() < self.n
         assert self.v.min() >= 0 and self.v.max() < self.n
 

@@ -4,21 +4,29 @@ At Friendster scale (1.8 B edges = ~22 GB as int32 triples) a single
 host cannot hold the edge list; `ShardedEdgeReader` streams fixed-size
 chunks so each host of a pod loads only its slice (the production
 ingestion path; tests exercise it with small files).
+
+The reader does NOT materialize whole npz members: each array inside
+the zip is opened as a stream, its npy header parsed, bytes up to the
+host's slice skipped, and chunks decoded with `np.frombuffer` — peak
+host memory is O(chunk_size), independent of the file's edge count.
 """
 from __future__ import annotations
 
 import os
-from typing import Iterator
+import zipfile
+from typing import IO, Iterator
 
 import numpy as np
 
 from repro.graph.edges import Graph
 
+_SKIP_BUF = 1 << 24        # discard stride while seeking into a slice
+
 
 def save_graph(path: str, g: Graph) -> None:
-    tmp = path + ".tmp"
+    tmp = path + ".tmp.npz"     # keep the suffix so savez doesn't append
     np.savez_compressed(tmp, u=g.u, v=g.v, w=g.w, n=np.int64(g.n))
-    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    os.replace(tmp, path)
 
 
 def load_graph(path: str) -> Graph:
@@ -26,24 +34,77 @@ def load_graph(path: str) -> Graph:
     return Graph(d["u"], d["v"], d["w"], int(d["n"]))
 
 
+def _open_member(zf: zipfile.ZipFile, name: str) -> tuple[IO[bytes],
+                                                          np.dtype, int]:
+    """Open `name.npy` inside the zip positioned at the data section.
+
+    Returns (stream, dtype, count) without reading the array body."""
+    f = zf.open(name + ".npy")
+    version = np.lib.format.read_magic(f)
+    if version == (1, 0):
+        shape, fortran, dtype = np.lib.format.read_array_header_1_0(f)
+    else:
+        shape, fortran, dtype = np.lib.format.read_array_header_2_0(f)
+    assert not fortran and len(shape) <= 1
+    return f, dtype, int(shape[0]) if shape else 1
+
+
+def _skip(f: IO[bytes], nbytes: int) -> None:
+    """Advance a (possibly compressed, forward-only) stream by nbytes."""
+    while nbytes > 0:
+        got = f.read(min(nbytes, _SKIP_BUF))
+        if not got:
+            raise EOFError("npz member shorter than header promised")
+        nbytes -= len(got)
+
+
+def _read_exact(f: IO[bytes], nbytes: int) -> bytes:
+    parts = []
+    while nbytes > 0:
+        got = f.read(nbytes)
+        if not got:
+            raise EOFError("npz member shorter than header promised")
+        parts.append(got)
+        nbytes -= len(got)
+    return b"".join(parts)
+
+
 class ShardedEdgeReader:
     """Streams the edge slice belonging to (host_id, num_hosts).
 
     Edges are split contiguously; random edge order must be pre-shuffled
-    on disk (generators do).  chunk_size bounds host memory."""
+    on disk (generators do).  chunk_size bounds host memory: members are
+    decoded chunk-by-chunk from the zip streams, never loaded whole."""
 
     def __init__(self, path: str, host_id: int, num_hosts: int,
                  chunk_size: int = 1 << 22):
-        self.d = np.load(path, mmap_mode=None)
-        s = self.d["u"].shape[0]
+        self.path = path
+        with zipfile.ZipFile(path) as zf:
+            f, _, s = _open_member(zf, "u")
+            f.close()
+            fn, ndt, _ = _open_member(zf, "n")
+            self.n = int(np.frombuffer(_read_exact(fn, ndt.itemsize),
+                                       dtype=ndt)[0])
+            fn.close()
         per = (s + num_hosts - 1) // num_hosts
         self.lo = host_id * per
         self.hi = min(s, self.lo + per)
         self.chunk = chunk_size
-        self.n = int(self.d["n"])
 
     def __iter__(self) -> Iterator[Graph]:
-        for off in range(self.lo, self.hi, self.chunk):
-            end = min(off + self.chunk, self.hi)
-            yield Graph(self.d["u"][off:end], self.d["v"][off:end],
-                        self.d["w"][off:end], self.n)
+        if self.lo >= self.hi:
+            return
+        with zipfile.ZipFile(self.path) as zf:
+            streams = {}
+            for key in ("u", "v", "w"):
+                f, dtype, _ = _open_member(zf, key)
+                _skip(f, self.lo * dtype.itemsize)
+                streams[key] = (f, dtype)
+            for off in range(self.lo, self.hi, self.chunk):
+                m = min(self.chunk, self.hi - off)
+                u, v, w = (
+                    np.frombuffer(_read_exact(f, m * dt.itemsize), dtype=dt)
+                    for (f, dt) in (streams[k] for k in ("u", "v", "w")))
+                yield Graph(u, v, w, self.n)
+            for f, _ in streams.values():
+                f.close()

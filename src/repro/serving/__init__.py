@@ -1,0 +1,23 @@
+"""Online GEE embedding service.
+
+Turns the offline edge-parallel embedding (`core/gee.py`) into a live
+system: a versioned graph store (`store.py`), an incrementally
+maintained embedding (`service.py`), jitted query kernels
+(`queries.py`), and a microbatching front-end (`batcher.py`).  The CLI
+driver (`server.py`) exercises the stack on a synthetic SBM workload.
+
+Version / epoch model (shared vocabulary across the subsystem):
+
+* **version** — the graph store's logical clock.  Every applied delta
+  (edge insert/delete batch, label update) increments it by one.
+* **epoch**   — the label/projection-weight generation the embedding Z
+  was last *rebuilt* under.  Edge deltas fold into Z exactly (GEE is
+  linear in the edge multiset), so Z tracks `version` without changing
+  `epoch`; label churn past a threshold, or a compaction, forces a
+  full rebuild and bumps `epoch`.
+"""
+from repro.serving.batcher import MicroBatcher
+from repro.serving.service import EmbeddingService
+from repro.serving.store import GraphStore
+
+__all__ = ["GraphStore", "EmbeddingService", "MicroBatcher"]

@@ -1,0 +1,253 @@
+"""Microbatching request queue for the embedding service.
+
+Concurrent read requests of the same kind are coalesced into one
+kernel launch (node arrays concatenated, one gather / predict / top-k
+call, results split back per ticket).  Writes are barriers: a write
+request flushes all reads queued before it, then runs alone against
+the store's version counter, so every read observes a single
+well-defined (version, epoch) and writes apply in submission order.
+
+Each ticket records the (version, epoch) it executed against plus wall
+latency; `stats()` aggregates per-kind counts, batch sizes, end-to-end
+latency, and execution throughput — the observability surface
+`server.py` prints.
+
+A bad request (out-of-range node ids, malformed batch) fails only its
+own ticket(s): the exception is captured on the ticket and re-raised
+from `ticket.result()`; the rest of the queue is still served, so a
+producer can never be left hanging on a poisoned flush.
+
+Thread-safe: `submit` may be called from many threads; `flush` drains
+the queue under a lock (single consumer).  Tickets carry an Event so
+producers can block on `ticket.result()`.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.serving import queries as Q
+from repro.serving.service import EmbeddingService
+from repro.serving.store import bucket_size
+
+READ_KINDS = ("embed", "predict", "topk")
+WRITE_KINDS = ("insert", "delete", "labels")
+
+
+@dataclass
+class Ticket:
+    kind: str
+    payload: Any
+    submitted: float
+    done: threading.Event = field(default_factory=threading.Event)
+    value: Any = None
+    error: Optional[BaseException] = None
+    version: int = -1
+    epoch: int = -1
+    latency: float = 0.0
+
+    def result(self, timeout: Optional[float] = None):
+        if not self.done.wait(timeout):
+            raise TimeoutError(f"{self.kind} ticket not served")
+        if self.error is not None:
+            raise self.error
+        return self.value
+
+
+class _KindStats:
+    __slots__ = ("requests", "batches", "items", "wall", "exec_wall",
+                 "errors")
+
+    def __init__(self):
+        self.requests = 0
+        self.batches = 0
+        self.items = 0
+        self.wall = 0.0          # sum of per-ticket end-to-end latencies
+        self.exec_wall = 0.0     # kernel/apply execution time per batch
+        self.errors = 0
+
+
+class MicroBatcher:
+    """Coalesces reads, serializes writes, keeps per-kind stats."""
+
+    def __init__(self, service: EmbeddingService, *, topk: int = 10,
+                 topk_block_rows: int = 1 << 14):
+        self.service = service
+        self.topk = int(topk)
+        self.topk_block_rows = int(topk_block_rows)
+        self._lock = threading.Lock()
+        self._queue: list[Ticket] = []
+        self._stats = {k: _KindStats()
+                       for k in READ_KINDS + WRITE_KINDS}
+
+    # -- producer side -----------------------------------------------------
+
+    def submit(self, kind: str, payload: Any) -> Ticket:
+        """Enqueue a request.  Reads: payload = node array.  Writes:
+        insert/delete -> (u, v, w); labels -> (nodes, labels)."""
+        assert kind in self._stats, kind
+        t = Ticket(kind, payload, time.perf_counter())
+        with self._lock:
+            self._queue.append(t)
+            self._stats[kind].requests += 1
+        return t
+
+    # -- consumer side -----------------------------------------------------
+
+    def flush(self) -> int:
+        """Drain the queue: coalesced read batches between write barriers.
+        Returns the number of tickets served."""
+        with self._lock:
+            batch, self._queue = self._queue, []
+        served = 0
+        reads: list[Ticket] = []
+        for t in batch:
+            if t.kind in WRITE_KINDS:
+                served += self._run_reads(reads)
+                reads = []
+                served += self._run_write(t)
+            else:
+                reads.append(t)
+        served += self._run_reads(reads)
+        return served
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # -- execution ---------------------------------------------------------
+
+    def _finish(self, t: Ticket, value: Any,
+                error: Optional[BaseException] = None) -> None:
+        t.value = value
+        t.error = error
+        t.version = self.service.version
+        t.epoch = self.service.epoch
+        t.latency = time.perf_counter() - t.submitted
+        with self._lock:          # stats() reads under the same lock
+            st = self._stats[t.kind]
+            st.wall += t.latency
+            if error is not None:
+                st.errors += 1
+        t.done.set()
+
+    def _count_batch(self, kind: str, items: int, exec_s: float) -> None:
+        with self._lock:
+            st = self._stats[kind]
+            st.batches += 1
+            st.items += items
+            st.exec_wall += exec_s
+
+    def _run_write(self, t: Ticket) -> int:
+        t0 = time.perf_counter()
+        try:
+            if t.kind == "labels":
+                nodes, labels = t.payload
+                version = self.service.apply_label_delta(nodes, labels)
+                items = len(np.atleast_1d(nodes))
+            else:
+                u, v, w = t.payload
+                version = self.service.apply_edge_delta(
+                    u, v, w, delete=(t.kind == "delete"))
+                items = len(np.atleast_1d(u))
+        except Exception as e:        # bad batch: fail the ticket, not
+            self._count_batch(t.kind, 0, 0.0)
+            self._finish(t, None, e)  # the queue behind it
+        else:
+            self._count_batch(t.kind, items, time.perf_counter() - t0)
+            self._finish(t, version)
+        return 1
+
+    def _run_reads(self, tickets: list[Ticket]) -> int:
+        """One kernel launch per kind present in this read window.
+        Node batches are padded to power-of-two buckets (node 0; the
+        pad tail is never split back to a ticket) so the jitted kernels
+        compile once per bucket, mirroring the write path."""
+        by_kind: dict[str, list[Ticket]] = {}
+        for t in tickets:
+            by_kind.setdefault(t.kind, []).append(t)
+        n = self.service.store.n
+        for kind, group in by_kind.items():
+            served, nodes, sizes = [], [], []
+            for t in group:
+                try:
+                    x = np.atleast_1d(np.asarray(t.payload, np.int32))
+                    # JAX gathers clamp out-of-range indices — reject
+                    # them here or reads return silently-wrong rows
+                    if x.size and (x.min() < 0 or x.max() >= n):
+                        raise IndexError(
+                            f"{kind} node ids outside [0, {n})")
+                except Exception as e:     # fail this ticket only
+                    self._finish(t, None, e)
+                    continue
+                served.append(t)
+                nodes.append(x)
+                sizes.append(x.shape[0])
+            if not served:
+                continue
+            t0 = time.perf_counter()
+            try:
+                cat = np.concatenate(nodes)
+                padded = np.zeros(bucket_size(cat.shape[0]), np.int32)
+                padded[:cat.shape[0]] = cat
+                parts = self._run_read_kernel(kind, padded, sizes)
+            except Exception as e:
+                self._count_batch(kind, 0, 0.0)
+                for t in served:
+                    self._finish(t, None, e)
+            else:
+                self._count_batch(kind, cat.shape[0],
+                                  time.perf_counter() - t0)
+                for t, part in zip(served, parts):
+                    self._finish(t, part)
+        return len(tickets)
+
+    def _run_read_kernel(self, kind: str, cat: np.ndarray,
+                         sizes: list[int]) -> list:
+        Z = self.service.Z
+        if kind == "embed":
+            out = np.asarray(Q.gather_embeddings(Z, cat))
+            return self._split(out, sizes)
+        if kind == "predict":
+            pred, score = Q.predict_labels(Z, self.service.centroids(),
+                                           cat)
+            return list(zip(self._split(np.asarray(pred), sizes),
+                            self._split(np.asarray(score), sizes)))
+        idx, val = Q.topk_cosine(self.service.normalized_Z(), cat,
+                                 k=self.topk, pre_normalized=True,
+                                 block_rows=self.topk_block_rows)
+        return list(zip(self._split(idx, sizes),
+                        self._split(val, sizes)))
+
+    @staticmethod
+    def _split(arr: np.ndarray, sizes: list[int]) -> list[np.ndarray]:
+        out, off = [], 0
+        for s in sizes:
+            out.append(arr[off:off + s])
+            off += s
+        return out
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            rows = {}
+            for kind, st in self._stats.items():
+                if not st.requests:
+                    continue
+                rows[kind] = {
+                    "requests": st.requests, "batches": st.batches,
+                    "items": st.items, "errors": st.errors,
+                    "mean_batch": st.items / max(st.batches, 1),
+                    # end-to-end (incl. queue wait), per request
+                    "mean_latency_ms": 1e3 * st.wall / max(st.requests, 1),
+                    # kernel/apply throughput: items over *execution*
+                    # time, counted once per coalesced batch
+                    "items_per_s": (st.items / st.exec_wall
+                                    if st.exec_wall else 0.0),
+                }
+            return rows

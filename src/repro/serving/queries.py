@@ -1,0 +1,99 @@
+"""Jitted query kernels over a served embedding Z (n, K).
+
+Three read paths, each shaped for microbatching (`batcher.py` stacks
+many user requests into one kernel call):
+
+* ``gather_embeddings``  — Z rows for a node batch.
+* ``predict_labels``     — nearest-class-centroid label prediction in
+  cosine space (centroids from the epoch's labeled nodes).
+* ``topk_cosine``        — blocked top-k cosine nearest neighbors over
+  all n rows; the candidate matrix is processed ``block_rows`` rows at
+  a time so peak memory is O(q · block_rows), not O(q · n), and the
+  running top-k is merged with ``lax.top_k`` per block.
+
+Kernels are pure functions of (Z, ...) so they jit once per shape and
+stay valid across versions/epochs — the service just passes its
+current Z.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def gather_embeddings(Z, nodes):
+    return Z[nodes]
+
+
+def normalize_rows(X, eps=1e-9):
+    return X / jnp.maximum(jnp.linalg.norm(X, axis=-1, keepdims=True), eps)
+
+
+@functools.partial(jax.jit, static_argnames=("K",))
+def class_centroids(Z, Y, *, K: int):
+    """Mean embedding of each class's labeled nodes (K, K-dim)."""
+    labeled = (Y >= 0).astype(Z.dtype)
+    onehot = jax.nn.one_hot(jnp.maximum(Y, 0), K, dtype=Z.dtype)
+    onehot = onehot * labeled[:, None]
+    sums = onehot.T @ Z
+    counts = onehot.sum(0)[:, None]
+    return sums / jnp.maximum(counts, 1.0)
+
+
+@jax.jit
+def predict_labels(Z, centroids, nodes):
+    """Label = argmax cosine(Z[node], centroid_k).  Returns (pred, score)."""
+    q = normalize_rows(Z[nodes])
+    c = normalize_rows(centroids)
+    sims = q @ c.T
+    return jnp.argmax(sims, 1).astype(jnp.int32), jnp.max(sims, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "exclude_self"))
+def _topk_block(vals, idxs, q, block, base, n, qnodes, *,
+                exclude_self: bool, k: int):
+    """Merge one candidate block into the running (vals, idxs) top-k."""
+    scores = q @ block.T                                   # (q, B)
+    gidx = base + jnp.arange(block.shape[0])               # (B,)
+    mask = gidx[None, :] >= n                              # zero-padded tail
+    if exclude_self:
+        mask = mask | (gidx[None, :] == qnodes[:, None])
+    scores = jnp.where(mask, -jnp.inf, scores)
+    cat_v = jnp.concatenate([vals, scores], 1)
+    cat_i = jnp.concatenate(
+        [idxs, jnp.broadcast_to(gidx, scores.shape)], 1)
+    v, sel = jax.lax.top_k(cat_v, k)
+    return v, jnp.take_along_axis(cat_i, sel, 1)
+
+
+def topk_cosine(Z, nodes, *, k: int = 10, block_rows: int = 1 << 14,
+                exclude_self: bool = True, pre_normalized: bool = False):
+    """Top-k cosine neighbors of Z[nodes] over all rows of Z.
+
+    Pass pre_normalized=True when Z rows are already unit-norm (the
+    service caches `normalize_rows(Z)` per version so repeated queries
+    skip the O(n*K) pass).  Returns (indices (q, k) int32,
+    scores (q, k) float32) as numpy."""
+    n = Z.shape[0]
+    nodes = jnp.asarray(np.asarray(nodes, np.int32))
+    Zn = Z if pre_normalized else normalize_rows(Z)
+    q = Zn[nodes]
+    nq = q.shape[0]
+    vals = jnp.full((nq, k), -jnp.inf, Z.dtype)
+    idxs = jnp.full((nq, k), -1, jnp.int32)
+    for base in range(0, n, block_rows):
+        block = Zn[base:min(base + block_rows, n)]
+        if block.shape[0] < block_rows and base > 0:
+            # pad the tail block so the jitted kernel sees one shape
+            pad = block_rows - block.shape[0]
+            block = jnp.pad(block, ((0, pad), (0, 0)))
+        vals, idxs = _topk_block(vals, idxs, q, block, base, n, nodes,
+                                 exclude_self=exclude_self, k=k)
+    # entries never filled (k > candidate count) keep idx -1 / -inf
+    valid = jnp.isfinite(vals)
+    idxs = jnp.where(valid, idxs, -1)
+    return np.asarray(idxs), np.asarray(vals)

@@ -1,0 +1,132 @@
+"""Incrementally maintained GEE embedding over a `GraphStore`.
+
+The service owns Z (n, K) and keeps it consistent with the store's
+version counter:
+
+* **Edge deltas** fold into Z with `gee_apply_delta` — O(batch) work,
+  exact by linearity, no epoch change.  Batches are padded to
+  power-of-two buckets (zero-weight self-loops are no-op edges) so the
+  jitted kernel compiles once per bucket, not once per batch size.
+* **Label deltas** change the projection weights W, which touches every
+  edge incident to the affected classes — not expressible as an edge
+  delta.  The service keeps serving the previous epoch's Z (exact for
+  the epoch's labels) and tracks churn vs. the epoch snapshot; once
+  churn exceeds `rebuild_churn` it re-embeds from scratch with
+  `gee_streaming` and starts a new epoch.
+* **Compaction** rewrites the store's base multiset and always ends in
+  a rebuild, so epochs also advance on compaction.
+
+Invariant (tested): with no pending label churn, Z equals a
+from-scratch `gee` over the store's live multiset, to float tolerance.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gee import gee_apply_delta, gee_streaming, make_w
+from repro.graph.edges import Graph
+from repro.serving import queries as Q
+from repro.serving.store import GraphStore, bucket_size
+
+
+class EmbeddingService:
+    """Serves Z for a live graph; delta-maintains, rebuilds on churn."""
+
+    def __init__(self, store: GraphStore, *, rebuild_churn: float = 0.05,
+                 chunk_size: int = 1 << 20):
+        self.store = store
+        self.rebuild_churn = float(rebuild_churn)
+        self.chunk_size = int(chunk_size)
+        self.epoch = 0
+        self.deltas_applied = 0
+        self.rebuilds = 0
+        self._rebuild()
+
+    # -- epoch state -------------------------------------------------------
+
+    def _rebuild(self) -> None:
+        """Full re-embed under the store's current labels; new epoch."""
+        self.Y_epoch = self.store.Y.copy()
+        Yj = jnp.asarray(self.Y_epoch)
+        self.Wv = make_w(Yj, self.store.K)
+        self._Yj = Yj
+        self.Z = gee_streaming(self.store.chunks(self.chunk_size), Yj,
+                               K=self.store.K, n=self.store.n)
+        self.version = self.store.version
+        self.epoch += 1
+        self.rebuilds += 1
+        self._invalidate_query_cache()
+
+    def _invalidate_query_cache(self) -> None:
+        """Derived query state (centroids, normalized Z) is a pure
+        function of (Z, epoch labels); drop it whenever either moves."""
+        self._centroids = None
+        self._Zn = None
+
+    def centroids(self):
+        """Class centroids of the current Z, cached until invalidated."""
+        if self._centroids is None:
+            self._centroids = Q.class_centroids(self.Z, self._Yj,
+                                                K=self.store.K)
+        return self._centroids
+
+    def normalized_Z(self):
+        """Row-normalized Z for cosine queries, cached until invalidated."""
+        if self._Zn is None:
+            self._Zn = Q.normalize_rows(self.Z)
+        return self._Zn
+
+    @property
+    def churn(self) -> float:
+        return self.store.churn_fraction(self.Y_epoch)
+
+    @property
+    def stale_labels(self) -> int:
+        return int((self.store.Y != self.Y_epoch).sum())
+
+    def stats(self) -> dict:
+        return {"version": self.version, "epoch": self.epoch,
+                "deltas_applied": self.deltas_applied,
+                "rebuilds": self.rebuilds, "churn": self.churn,
+                "log_edges": self.store.log_edges,
+                "base_edges": self.store.base.s}
+
+    # -- writes ------------------------------------------------------------
+
+    def apply_edge_delta(self, u, v, w, *, delete: bool = False) -> int:
+        """Fold an edge batch into store + Z.  O(batch).  Returns version."""
+        version = self.store.apply_edges(u, v, w, delete=delete)
+        batch = Graph(np.asarray(u, np.int32), np.asarray(v, np.int32),
+                      np.asarray(w, np.float32), self.store.n)
+        if batch.s:
+            padded = batch.pad_to(bucket_size(batch.s))
+            self.Z = gee_apply_delta(
+                self.Z, jnp.asarray(padded.u), jnp.asarray(padded.v),
+                jnp.asarray(padded.w), self._Yj, self.Wv,
+                K=self.store.K, sign=-1.0 if delete else 1.0)
+            self._invalidate_query_cache()
+        self.version = version
+        self.deltas_applied += 1
+        return version
+
+    def apply_label_delta(self, nodes, labels) -> int:
+        """Update labels; rebuild immediately if churn passes threshold,
+        otherwise keep serving the current epoch's Z."""
+        version = self.store.apply_labels(nodes, labels)
+        self.version = version
+        if self.churn > self.rebuild_churn:
+            self._rebuild()
+        return version
+
+    def compact(self) -> dict:
+        """Compact the store and start a fresh epoch."""
+        info = self.store.compact()
+        self._rebuild()
+        return info
+
+    def refresh(self) -> None:
+        """Force a rebuild (e.g. to pick up sub-threshold label churn)."""
+        self._rebuild()

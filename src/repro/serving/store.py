@@ -1,0 +1,185 @@
+"""Versioned in-memory graph store with an append-only delta log.
+
+The store separates a compacted **base** edge multiset from a log of
+deltas applied since the last compaction.  Because GEE is linear in
+the edge multiset, a deletion is represented exactly as the same edge
+with negated weight — the materialized multiset `base ++ log` always
+reproduces the live graph, and `compact()` folds the log into the base
+by coalescing duplicate (u, v) keys and dropping ~zero weights.
+
+Every applied delta (edge batch or label update) bumps `version`, the
+store's logical clock; readers use it to tell which graph state a
+result was computed against (see the version/epoch model in
+`repro.serving.__init__`).  Label updates materialize straight into Y
+rather than the log — they are not replayable against Z and only feed
+the service's next rebuild.  Snapshots go through `graph/io.py`
+(`save_graph`/`load_graph`) plus a sibling `.meta.npz` for labels and
+counters, so a snapshot can be re-served or streamed back through
+`ShardedEdgeReader`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.graph.edges import Graph
+from repro.graph.io import load_graph, save_graph
+
+_ZERO_W = 1e-12       # coalesced weights below this are dropped
+_MIN_BUCKET = 256
+
+
+def bucket_size(size: int, floor: int = _MIN_BUCKET) -> int:
+    """Next power-of-two >= size (>= floor) — the shared padding policy
+    that keeps jitted kernels at one compile per bucket, not per batch."""
+    b = floor
+    while b < size:
+        b <<= 1
+    return b
+
+
+@dataclass(frozen=True)
+class EdgeDelta:
+    """One logged edge batch.  `w` is already sign-folded: deletions are
+    stored with negative weights (exact under GEE's linearity)."""
+    version: int
+    u: np.ndarray
+    v: np.ndarray
+    w: np.ndarray
+
+
+class GraphStore:
+    """Append-only delta log over a compacted base edge multiset."""
+
+    def __init__(self, g: Graph, Y: np.ndarray, K: int):
+        g.validate()
+        self.base = Graph(np.asarray(g.u, np.int32),
+                          np.asarray(g.v, np.int32),
+                          np.asarray(g.w, np.float32), g.n)
+        self.Y = np.asarray(Y, np.int32).copy()
+        assert self.Y.shape == (g.n,)
+        self.K = int(K)
+        self.version = 0
+        self.compactions = 0
+        self.edge_log: list[EdgeDelta] = []
+
+    # -- delta application ------------------------------------------------
+
+    def apply_edges(self, u, v, w, *, delete: bool = False) -> int:
+        """Log an edge insert (or delete) batch; returns the new version.
+
+        Empty batches are legal (a no-op that still bumps the clock)."""
+        u = np.asarray(u, np.int32)
+        v = np.asarray(v, np.int32)
+        w = np.asarray(w, np.float32)
+        Graph(u, v, w, self.base.n).validate()
+        self.version += 1
+        self.edge_log.append(EdgeDelta(
+            self.version, u, v, -w if delete else w))
+        return self.version
+
+    def apply_labels(self, nodes, labels) -> int:
+        """Point-update labels; returns the new version.
+
+        Labels are materialized straight into Y (not logged): a label
+        change is not replayable against Z — the service re-derives the
+        projection weights from Y on its next rebuild."""
+        nodes = np.asarray(nodes, np.int64)
+        labels = np.asarray(labels, np.int32)
+        assert nodes.shape == labels.shape
+        if nodes.size:
+            assert nodes.min() >= 0 and nodes.max() < self.base.n
+            assert labels.min() >= -1 and labels.max() < self.K
+        self.version += 1
+        self.Y[nodes] = labels
+        return self.version
+
+    # -- materialization --------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.base.n
+
+    @property
+    def log_edges(self) -> int:
+        return sum(d.u.shape[0] for d in self.edge_log)
+
+    def edges(self) -> Graph:
+        """Current edge multiset = base ++ log (deletes as negative w)."""
+        if not self.edge_log:
+            return self.base
+        return Graph(
+            np.concatenate([self.base.u] + [d.u for d in self.edge_log]),
+            np.concatenate([self.base.v] + [d.v for d in self.edge_log]),
+            np.concatenate([self.base.w] + [d.w for d in self.edge_log]),
+            self.base.n)
+
+    def chunks(self, chunk_size: int) -> Iterator[tuple]:
+        """(u, v, w) chunks of the live multiset — feeds gee_streaming.
+
+        The tail chunk is padded to a power-of-two bucket with
+        zero-weight node-0 self-loops (no-op edges) so rebuilds reuse
+        jit compilations across changing edge counts, mirroring the
+        write path's bucket policy."""
+        g = self.edges()
+        for off in range(0, g.s, chunk_size):
+            end = min(off + chunk_size, g.s)
+            m = end - off
+            if m < chunk_size:
+                yield tuple(
+                    np.concatenate([a[off:end], pad]) for a, pad in (
+                        (g.u, np.zeros(bucket_size(m) - m, np.int32)),
+                        (g.v, np.zeros(bucket_size(m) - m, np.int32)),
+                        (g.w, np.zeros(bucket_size(m) - m, np.float32))))
+            else:
+                yield g.u[off:end], g.v[off:end], g.w[off:end]
+
+    def churn_fraction(self, Y_epoch: np.ndarray) -> float:
+        """Fraction of nodes whose label differs from an epoch snapshot."""
+        return float((self.Y != Y_epoch).mean()) if self.n else 0.0
+
+    # -- compaction & snapshots -------------------------------------------
+
+    def compact(self) -> dict:
+        """Fold the log into the base: coalesce duplicate (u, v) keys,
+        sum weights, drop ~zero entries.  Logical content is unchanged
+        (GEE is linear, so coalescing parallel edges is exact); the
+        version counter is NOT bumped."""
+        g = self.edges()
+        before = g.s
+        key = g.u.astype(np.int64) * g.n + g.v
+        uniq, inv = np.unique(key, return_inverse=True)
+        w = np.zeros(uniq.shape[0], np.float64)
+        np.add.at(w, inv, g.w.astype(np.float64))
+        keep = np.abs(w) > _ZERO_W
+        uniq, w = uniq[keep], w[keep]
+        self.base = Graph((uniq // g.n).astype(np.int32),
+                          (uniq % g.n).astype(np.int32),
+                          w.astype(np.float32), g.n)
+        self.edge_log.clear()
+        self.compactions += 1
+        return {"edges_before": before, "edges_after": self.base.s,
+                "compactions": self.compactions}
+
+    def snapshot(self, prefix: str) -> None:
+        """Write `<prefix>.edges.npz` (via graph/io) + `<prefix>.meta.npz`.
+
+        Compacts first so the snapshot is the minimal coalesced multiset
+        and the delta log is empty on reload."""
+        self.compact()
+        save_graph(prefix + ".edges.npz", self.base)
+        np.savez_compressed(prefix + ".meta.npz", Y=self.Y,
+                            K=np.int64(self.K),
+                            version=np.int64(self.version),
+                            compactions=np.int64(self.compactions))
+
+    @classmethod
+    def load(cls, prefix: str) -> "GraphStore":
+        g = load_graph(prefix + ".edges.npz")
+        meta = np.load(prefix + ".meta.npz")
+        store = cls(g, meta["Y"], int(meta["K"]))
+        store.version = int(meta["version"])
+        store.compactions = int(meta["compactions"])
+        return store

@@ -1,0 +1,285 @@
+"""Online serving subsystem: the first stateful correctness surface —
+delta-maintained Z must track a from-scratch rebuild through arbitrary
+insert/delete/compaction histories (GEE linearity made load-bearing),
+plus query kernels and microbatcher semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gee import gee, gee_apply_delta, gee_streaming, make_w
+from repro.graph.edges import Graph, make_labels
+from repro.graph.generators import erdos_renyi, sbm
+from repro.serving.batcher import MicroBatcher
+from repro.serving.queries import (class_centroids, gather_embeddings,
+                                   predict_labels, topk_cosine)
+from repro.serving.service import EmbeddingService
+from repro.serving.store import GraphStore
+
+
+def _jax_gee(g, Y, K):
+    return np.asarray(gee(jnp.asarray(g.u), jnp.asarray(g.v),
+                          jnp.asarray(g.w), jnp.asarray(Y), K=K, n=g.n))
+
+
+def _setup(n=120, s=600, K=5, seed=0, frac=0.4):
+    g = erdos_renyi(n, s, seed=seed, weighted=True)
+    Y = make_labels(n, K, frac, np.random.default_rng(seed))
+    return g, Y
+
+
+def _rand_batch(rng, n, b):
+    return (rng.integers(0, n, b).astype(np.int32),
+            rng.integers(0, n, b).astype(np.int32),
+            (rng.random(b, dtype=np.float32) + 0.5))
+
+
+class TestIncrementalEquivalence:
+    @pytest.mark.parametrize("seed", range(5))
+    def test_streaming_over_chunks_equals_oneshot(self, seed):
+        """Property: gee_streaming over arbitrary chunkings == gee."""
+        rng = np.random.default_rng(seed)
+        g, Y = _setup(seed=seed, s=int(rng.integers(200, 800)))
+        Yj = jnp.asarray(Y)
+        cuts = np.sort(rng.integers(0, g.s, size=3))
+        bounds = [0, *cuts.tolist(), g.s]
+        chunks = [(jnp.asarray(g.u[a:b]), jnp.asarray(g.v[a:b]),
+                   jnp.asarray(g.w[a:b]))
+                  for a, b in zip(bounds[:-1], bounds[1:])]
+        Z = gee_streaming(chunks, Yj, K=5, n=g.n)
+        np.testing.assert_allclose(np.asarray(Z), _jax_gee(g, Y, 5),
+                                   atol=1e-5)
+
+    @pytest.mark.parametrize("seed", range(5))
+    def test_insert_then_delete_roundtrips(self, seed):
+        """Property: applying a delta with sign=+1 then sign=-1 restores
+        the original Z (random weighted digraphs)."""
+        rng = np.random.default_rng(100 + seed)
+        g, Y = _setup(seed=seed)
+        Yj = jnp.asarray(Y)
+        Wv = make_w(Yj, 5)
+        Z0 = jnp.asarray(_jax_gee(g, Y, 5))
+        du, dv, dw = _rand_batch(rng, g.n, int(rng.integers(1, 200)))
+        du, dv, dw = jnp.asarray(du), jnp.asarray(dv), jnp.asarray(dw)
+        Z1 = gee_apply_delta(Z0, du, dv, dw, Yj, Wv, K=5)
+        assert float(jnp.abs(Z1 - Z0).max()) > 0    # delta did something
+        Z2 = gee_apply_delta(Z1, du, dv, dw, Yj, Wv, K=5, sign=-1.0)
+        np.testing.assert_allclose(np.asarray(Z2), np.asarray(Z0),
+                                   atol=1e-4)
+
+    def test_randomized_ops_match_scratch_rebuild(self):
+        """Acceptance: after a randomized sequence of edge inserts,
+        deletes, and a mid-sequence compaction, the delta-maintained Z
+        equals a from-scratch gee over the live multiset."""
+        rng = np.random.default_rng(7)
+        g, Y = _setup(seed=7)
+        service = EmbeddingService(GraphStore(g, Y, 5))
+        inserted = []
+        versions = [service.version]
+        for step in range(14):
+            op = rng.random()
+            if op < 0.55 or not inserted:
+                batch = _rand_batch(rng, g.n, int(rng.integers(0, 120)))
+                service.apply_edge_delta(*batch)
+                inserted.append(batch)
+            else:
+                batch = inserted.pop(int(rng.integers(0, len(inserted))))
+                service.apply_edge_delta(*batch, delete=True)
+            versions.append(service.version)
+            if step == 6:
+                service.compact()
+                assert service.store.log_edges == 0
+        assert versions == sorted(versions) and len(set(versions)) == 15
+        live = service.store.edges()
+        np.testing.assert_allclose(
+            np.asarray(service.Z), _jax_gee(live, service.Y_epoch, 5),
+            atol=1e-4)
+
+    def test_empty_delta_batches_are_legal(self):
+        g, Y = _setup(seed=3)
+        service = EmbeddingService(GraphStore(g, Y, 5))
+        Z0 = np.asarray(service.Z)
+        empty = (np.zeros(0, np.int32), np.zeros(0, np.int32),
+                 np.zeros(0, np.float32))
+        v1 = service.apply_edge_delta(*empty)
+        v2 = service.apply_edge_delta(*empty, delete=True)
+        assert (v1, v2) == (1, 2)
+        np.testing.assert_array_equal(np.asarray(service.Z), Z0)
+
+
+class TestEpochPolicy:
+    def test_label_churn_threshold_gates_rebuild(self):
+        g, Y = _setup(seed=11, frac=0.5)
+        truth = np.random.default_rng(11).integers(0, 5, g.n,
+                                                   dtype=np.int32)
+        service = EmbeddingService(GraphStore(g, Y, 5),
+                                   rebuild_churn=0.10)
+        assert service.epoch == 1
+        # flip 2% of nodes: below threshold -> same epoch, Z untouched
+        few = np.arange(2)
+        Z0 = np.asarray(service.Z)
+        service.apply_label_delta(few, (Y[few] + 1) % 5)
+        assert service.epoch == 1 and service.stale_labels > 0
+        np.testing.assert_array_equal(np.asarray(service.Z), Z0)
+        # flip 20%: rebuild under current labels, fresh epoch, no staleness
+        many = np.arange(g.n // 5)
+        service.apply_label_delta(many, truth[many])
+        assert service.epoch == 2 and service.stale_labels == 0
+        np.testing.assert_allclose(
+            np.asarray(service.Z), _jax_gee(g, service.store.Y, 5),
+            atol=1e-5)
+
+    def test_compaction_coalesces_and_preserves_embedding(self):
+        g, Y = _setup(seed=13)
+        service = EmbeddingService(GraphStore(g, Y, 5))
+        dup = (g.u[:50], g.v[:50], g.w[:50])
+        service.apply_edge_delta(*dup)              # parallel duplicates
+        service.apply_edge_delta(*dup, delete=True)  # ...and cancel them
+        Z_before = np.asarray(service.Z)
+        info = service.compact()
+        assert info["edges_after"] <= info["edges_before"]
+        base = service.store.base
+        assert np.abs(base.w).min() > 0             # no ~zero survivors
+        # coalesced: (u, v) keys unique
+        key = base.u.astype(np.int64) * base.n + base.v
+        assert np.unique(key).shape[0] == key.shape[0]
+        np.testing.assert_allclose(np.asarray(service.Z), Z_before,
+                                   atol=1e-4)
+
+    def test_snapshot_roundtrip(self, tmp_path):
+        rng = np.random.default_rng(17)
+        g, Y = _setup(seed=17)
+        service = EmbeddingService(GraphStore(g, Y, 5))
+        service.apply_edge_delta(*_rand_batch(rng, g.n, 80))
+        prefix = str(tmp_path / "snap")
+        service.store.snapshot(prefix)
+        store2 = GraphStore.load(prefix)
+        assert store2.version == service.store.version
+        assert store2.K == 5 and store2.log_edges == 0
+        np.testing.assert_array_equal(store2.Y, service.store.Y)
+        service2 = EmbeddingService(store2)
+        np.testing.assert_allclose(np.asarray(service2.Z),
+                                   np.asarray(service.Z), atol=1e-4)
+
+
+class TestQueries:
+    def test_topk_cosine_matches_dense(self):
+        g, Y = _setup(n=90, s=700, seed=19, frac=0.6)
+        Z = jnp.asarray(_jax_gee(g, Y, 5))
+        q = np.array([3, 10, 40, 77], np.int32)
+        # small block_rows forces multi-block merging + tail padding
+        idx, val = topk_cosine(Z, q, k=6, block_rows=32)
+        Zn = np.asarray(Z)
+        Zn = Zn / np.maximum(np.linalg.norm(Zn, axis=1, keepdims=True),
+                             1e-9)
+        sims = Zn[q] @ Zn.T
+        sims[np.arange(len(q)), q] = -np.inf        # exclude_self
+        for i in range(len(q)):
+            assert q[i] not in idx[i]
+            ref = np.sort(sims[i])[::-1][:6]
+            np.testing.assert_allclose(np.sort(val[i])[::-1], ref,
+                                       atol=1e-5)
+            np.testing.assert_allclose(sims[i][idx[i]], val[i], atol=1e-5)
+
+    def test_centroid_prediction_recovers_sbm_blocks(self):
+        g, truth = sbm(300, 4, 6000, p_in=0.9, seed=23)
+        Y = make_labels(300, 4, 0.2, np.random.default_rng(23),
+                        true_labels=truth)
+        Z = jnp.asarray(_jax_gee(g, Y, 4))
+        cent = class_centroids(Z, jnp.asarray(Y), K=4)
+        nodes = np.arange(300, dtype=np.int32)
+        pred, score = predict_labels(Z, cent, jnp.asarray(nodes))
+        acc = (np.asarray(pred) == truth).mean()
+        assert acc > 0.8, acc
+        assert np.asarray(score).max() <= 1.0 + 1e-5
+
+    def test_gather(self):
+        g, Y = _setup(seed=29)
+        Z = jnp.asarray(_jax_gee(g, Y, 5))
+        nodes = jnp.asarray(np.array([5, 5, 0, 119], np.int32))
+        out = np.asarray(gather_embeddings(Z, nodes))
+        np.testing.assert_array_equal(out, np.asarray(Z)[[5, 5, 0, 119]])
+
+
+class TestBatcher:
+    def test_reads_coalesce_and_writes_are_barriers(self):
+        rng = np.random.default_rng(31)
+        g, Y = _setup(seed=31)
+        service = EmbeddingService(GraphStore(g, Y, 5))
+        batcher = MicroBatcher(service, topk=4)
+        pre = [batcher.submit("embed", rng.integers(0, g.n, 8))
+               for _ in range(3)]
+        wt = batcher.submit("insert", _rand_batch(rng, g.n, 30))
+        post = [batcher.submit("embed", rng.integers(0, g.n, 8))
+                for _ in range(2)]
+        served = batcher.flush()
+        assert served == 6
+        # barrier semantics: pre-write reads saw version 0, the write
+        # bumped it to 1, post-write reads saw 1
+        assert {t.version for t in pre} == {0}
+        assert wt.result() == 1 and wt.version == 1
+        assert {t.version for t in post} == {1}
+        # coalescing: 5 embed requests served in exactly 2 kernel batches
+        st = batcher.stats()
+        assert st["embed"]["requests"] == 5
+        assert st["embed"]["batches"] == 2
+        assert st["embed"]["items"] == 40
+        # results correct per-ticket (post-write tickets see updated Z)
+        Z = np.asarray(service.Z)
+        for t in post:
+            np.testing.assert_allclose(
+                t.result(), Z[np.asarray(t.payload)], atol=1e-6)
+
+    def test_mixed_read_kinds_one_batch_each(self):
+        rng = np.random.default_rng(37)
+        g, truth = sbm(200, 4, 3000, p_in=0.9, seed=37)
+        Y = make_labels(200, 4, 0.3, np.random.default_rng(37),
+                        true_labels=truth)
+        service = EmbeddingService(GraphStore(g, Y, 4))
+        batcher = MicroBatcher(service, topk=3, topk_block_rows=64)
+        te = batcher.submit("embed", np.array([1, 2, 3]))
+        tp = batcher.submit("predict", np.array([4, 5]))
+        tt = batcher.submit("topk", np.array([6]))
+        tl = batcher.submit("labels",
+                            (np.array([0, 1]), truth[:2]))
+        batcher.flush()
+        assert te.result().shape == (3, 4)
+        pred, score = tp.result()
+        assert pred.shape == (2,) and score.shape == (2,)
+        idx, val = tt.result()
+        assert idx.shape == (1, 3) and 6 not in idx[0]
+        assert tl.result() == service.version
+        st = batcher.stats()
+        assert all(st[k]["batches"] == 1
+                   for k in ("embed", "predict", "topk", "labels"))
+
+    def test_bad_requests_fail_their_ticket_not_the_queue(self):
+        """A poisoned request must not hang or poison the flush: the
+        error lands on its own ticket, everything else is served."""
+        rng = np.random.default_rng(41)
+        g, Y = _setup(seed=41)
+        service = EmbeddingService(GraphStore(g, Y, 5))
+        batcher = MicroBatcher(service)
+        bad_read = batcher.submit("embed", np.array([g.n + 7]))
+        good_read = batcher.submit("embed", np.array([1, 2]))
+        bad_write = batcher.submit(
+            "insert", (np.array([g.n + 1], np.int32),
+                       np.array([0], np.int32), np.ones(1, np.float32)))
+        good_write = batcher.submit("insert", _rand_batch(rng, g.n, 10))
+        tail_read = batcher.submit("embed", np.array([3]))
+        served = batcher.flush()
+        assert served == 5 and batcher.pending() == 0
+        with pytest.raises(IndexError):
+            bad_read.result(timeout=1)
+        with pytest.raises(AssertionError):
+            bad_write.result(timeout=1)
+        # out-of-range reads were rejected, not clamped to row n-1
+        np.testing.assert_allclose(
+            good_read.result(timeout=1),
+            np.asarray(service.Z)[[1, 2]], atol=1e-6)
+        # the failed write did not bump the version; the good one did
+        assert good_write.result(timeout=1) == 1
+        assert tail_read.result(timeout=1).shape == (1, 5)
+        st = batcher.stats()
+        assert st["embed"]["errors"] == 1
+        assert st["insert"]["errors"] == 1
+        assert st["embed"]["items_per_s"] > 0
