@@ -2,11 +2,25 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test serve-demo bench-serving
+.PHONY: test lint install install-dev serve-demo bench-serving bench-encoder
 
 # Tier-1 verify: the whole suite, fail-fast.
 test:
 	$(PY) -m pytest -x -q
+
+# Style/defect gate (ruff; `make install-dev` provides it).
+lint:
+	$(PY) -m ruff check src tests benchmarks examples
+
+# Editable install of the package itself. --no-build-isolation so it
+# works offline (jax/numpy are baked into dev containers; the build
+# needs only the preinstalled setuptools).
+install:
+	$(PY) -m pip install -e . --no-build-isolation
+
+# Editable install + test/lint extras (hypothesis, ruff) — needs network.
+install-dev:
+	$(PY) -m pip install -e ".[test,lint]"
 
 # Smoke the online embedding service on a small SBM workload.
 serve-demo:
@@ -15,3 +29,7 @@ serve-demo:
 # Update-latency vs full re-embed + query throughput (>=1M edges).
 bench-serving:
 	$(PY) -m benchmarks.run --only serving
+
+# Unified Embedder API: per-backend edges/s + plan-cache effect.
+bench-encoder:
+	$(PY) -m benchmarks.run --only encoder

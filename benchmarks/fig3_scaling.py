@@ -23,24 +23,23 @@ from benchmarks.common import emit
 
 _WORKER = r"""
 import json, time
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np, jax
 from repro.graph.generators import erdos_renyi
 from repro.graph.edges import make_labels
-from repro.core.distributed import gee_distributed, edge_mesh
+from repro.encoder import Embedder, EncoderConfig
 
 g = erdos_renyi(100_000, 2_000_000, seed=1)
 Y = make_labels(g.n, 50, 0.10, np.random.default_rng(0))
-mesh = edge_mesh()
 P = len(jax.devices())
-# warm
-Z, dropped = gee_distributed(g, Y, K=50, mode="ring", mesh=mesh)
+emb = Embedder(EncoderConfig(K=50), backend="distributed:ring")
+emb.fit(g, Y)                           # plan + warm compile
 t0 = time.perf_counter()
 for _ in range(3):
-    Z, dropped = gee_distributed(g, Y, K=50, mode="ring", mesh=mesh)
+    jax.block_until_ready(emb.refit(Y).Z_)
 dt = (time.perf_counter() - t0) / 3
 print("RESULT " + json.dumps({
     "devices": P, "wall_s": dt, "edges_per_shard": g.s / P,
-    "dropped": int(dropped)}))
+    "dropped": emb.last_info_["dropped"]}))
 """
 
 
@@ -57,8 +56,8 @@ def run() -> None:
         if r.returncode != 0:
             emit(f"fig3/devices{ndev}/FAILED", 0.0, r.stderr[-200:])
             continue
-        line = [l for l in r.stdout.splitlines()
-                if l.startswith("RESULT ")][0]
+        line = [ln for ln in r.stdout.splitlines()
+                if ln.startswith("RESULT ")][0]
         d = json.loads(line[len("RESULT "):])
         if base is None:
             base = d["edges_per_shard"]

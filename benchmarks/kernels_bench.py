@@ -1,17 +1,18 @@
 """Kernel-path microbenchmarks (CPU interpret mode timings are NOT TPU
 performance — emitted for regression tracking of the wrappers, plus the
-jnp GEE hot path which IS the CPU production path)."""
+jnp GEE hot path which IS the CPU production path).  GEE paths go
+through the unified Embedder so what we time is what callers run."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, time_it
-from repro.core import gee as G
+from repro.encoder import Embedder, EncoderConfig
 from repro.graph.edges import make_labels
 from repro.graph.generators import erdos_renyi
 from repro.kernels import ops
+
+import numpy as np
 
 
 def run() -> None:
@@ -20,19 +21,18 @@ def run() -> None:
     for s in (1_000_000, 4_000_000):
         g = erdos_renyi(100_000, s, seed=s)
         Y = make_labels(g.n, 50, 0.1, rng)
-        uj, vj, wj, Yj = map(jnp.asarray, (g.u, g.v, g.w, Y))
-        t = time_it(lambda: G.gee(uj, vj, wj, Yj, K=50, n=g.n),
-                    warmup=1, iters=3)
+        emb = Embedder(EncoderConfig(K=50), backend="xla").fit(g, Y)
+        t = time_it(lambda: emb.refit(Y).Z_, warmup=1, iters=3)
         emit(f"kernels/gee_xla_scatter/s{s}", t,
              f"edges_per_s={s / t:,.0f}")
 
-    # pallas gee kernel in interpret mode (correctness path)
+    # pallas gee kernel in interpret mode (correctness path); the plan
+    # (destination packing) is cached, so refits time the kernel alone
     g = erdos_renyi(2_000, 16_000, seed=7)
     Y = make_labels(g.n, 16, 0.2, rng)
-    t = time_it(lambda: ops.gee_pallas(g.u, g.v, g.w, jnp.asarray(Y),
-                                       K=16, n=g.n, tile_n=256,
-                                       edge_block=256),
-                warmup=1, iters=2)
+    emb = Embedder(EncoderConfig(K=16, tile_n=256, edge_block=256),
+                   backend="pallas").fit(g, Y)
+    t = time_it(lambda: emb.refit(Y).Z_, warmup=1, iters=2)
     emit("kernels/gee_pallas_interpret/s16000", t, "correctness path")
 
     # flash attention kernel interpret vs jnp reference

@@ -8,6 +8,8 @@ Suites:
     fig3     — strong scaling (subprocess device sweep)
     fig4     — Erdős–Rényi edge-count linearity
     kernels  — kernel-path microbenches
+    encoder  — unified Embedder API: per-backend edges/s side by side
+               + plan-cache (host packing removed on refit)
     serving  — online-service update latency vs full re-embed + queries
     roofline — per-cell roofline terms from dry-run artifacts
 """
@@ -17,7 +19,8 @@ import argparse
 import sys
 import traceback
 
-SUITES = ("table1", "fig4", "kernels", "serving", "fig3", "roofline")
+SUITES = ("table1", "fig4", "kernels", "encoder", "serving", "fig3",
+          "roofline")
 
 
 def main() -> None:
@@ -39,6 +42,8 @@ def main() -> None:
                 from benchmarks.fig4_edges import run
             elif suite == "kernels":
                 from benchmarks.kernels_bench import run
+            elif suite == "encoder":
+                from benchmarks.encoder_bench import run
             elif suite == "serving":
                 from benchmarks.serving_bench import run
             elif suite == "roofline":

@@ -1,54 +1,50 @@
-"""Distributed GEE demo: embed a multi-million-edge graph with the
-edge-parallel SPMD pipeline on 8 (placeholder) devices — the exact code
-path the 512-chip dry-run lowers, at laptop scale.
+"""Distributed GEE demo: embed a multi-million-edge graph through the
+unified Embedder API's `distributed:*` backends on 8 (placeholder)
+devices — the exact code path the 512-chip dry-run lowers, at laptop
+scale.  The plan (padding + exact capacity measurement) is built once
+per backend; the timed fit reuses it.
 
-    PYTHONPATH=src python examples/distributed_gee.py
+    python examples/distributed_gee.py
 """
-import json
 import os
 import subprocess
 import sys
 
 WORKER = r"""
 import time
-import numpy as np, jax, jax.numpy as jnp
+import numpy as np, jax
 from repro.graph.generators import sbm
 from repro.graph.edges import make_labels
 from repro.graph.partition import shuffle_edges
-from repro.core.distributed import gee_distributed, edge_mesh
-from repro.core.ref_python import gee_numpy
+from repro.encoder import Embedder, EncoderConfig
 
 n, K, s = 200_000, 50, 8_000_000
 g, truth = sbm(n, K, s, p_in=0.85, seed=0)
 g = shuffle_edges(g, seed=1)
 Y = make_labels(n, K, 0.10, np.random.default_rng(0), true_labels=truth)
-mesh = edge_mesh()
 P = len(jax.devices())
-from repro.core.distributed import exact_capacity_factor
-cf = exact_capacity_factor(g, P)
-print(f"devices={P} edges={s:,} capacity_factor={cf:.2f} (auto)")
+print(f"devices={P} edges={s:,} (capacity factor measured in plan)")
 
 for mode in ("ring", "a2a", "reduce_scatter"):
-    Z, dropped = gee_distributed(g, Y, K=K, mode=mode, mesh=mesh,
-                                 capacity_factor=cf)   # warm + compile
+    emb = Embedder(EncoderConfig(K=K), backend=f"distributed:{mode}")
+    emb.fit(g, Y)                                  # plan + warm compile
     t0 = time.perf_counter()
-    Z, dropped = gee_distributed(g, Y, K=K, mode=mode, mesh=mesh,
-                                 capacity_factor=cf)
+    emb.refit(Y)                                   # cached plan
+    jax.block_until_ready(emb.Z_)
     dt = time.perf_counter() - t0
-    pred = Z.argmax(1)
+    pred = emb.predict()
     mask = Y < 0
     acc = (pred[mask] == truth[mask]).mean()
     print(f"mode={mode:14s} {dt*1e3:9.1f} ms  "
-          f"({s/dt/1e6:6.1f} M edges/s)  dropped={dropped}  "
-          f"unlabeled-acc={acc:.3f}")
+          f"({s/dt/1e6:6.1f} M edges/s)  "
+          f"dropped={emb.last_info_['dropped']}  "
+          f"plan={emb.plan_stats}  unlabeled-acc={acc:.3f}")
 """
 
 
 def main():
-    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(here, "src")
     r = subprocess.run([sys.executable, "-c", WORKER], env=env, text=True)
     sys.exit(r.returncode)
 

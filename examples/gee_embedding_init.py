@@ -2,22 +2,18 @@
 embedding of the token co-occurrence graph and compare early training
 against random init.
 
-    PYTHONPATH=src python examples/gee_embedding_init.py
+    python examples/gee_embedding_init.py
 """
-import sys
+import jax
+import jax.numpy as jnp
+import numpy as np
 
-sys.path.insert(0, "src")
-
-import jax                                    # noqa: E402
-import jax.numpy as jnp                       # noqa: E402
-import numpy as np                            # noqa: E402
-
-from repro.configs.base import ModelConfig    # noqa: E402
-from repro.core.embed_init import gee_embedding_init   # noqa: E402
-from repro.data.pipeline import DataConfig, SyntheticTokens  # noqa: E402
-from repro.models import model as M           # noqa: E402
-from repro.training.optimizer import AdamW    # noqa: E402
-from repro.training.train_loop import make_train_step  # noqa: E402
+from repro.configs.base import ModelConfig
+from repro.core.embed_init import gee_embedding_init
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.models import model as M
+from repro.training.optimizer import AdamW
+from repro.training.train_loop import make_train_step
 
 
 def run(use_gee_init: bool, steps: int = 60):

@@ -1,20 +1,21 @@
-"""Quickstart: embed a graph with GEE in three lines, verify quality.
+"""Quickstart: embed a graph with the unified Embedder API.
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .          # once, from the repo root
+    python examples/quickstart.py
+
+One config + one Embedder front door; the execution strategy (XLA
+scatter, Pallas kernel, SPMD collectives, streaming chunks, numpy
+oracle) is just the `backend=` string.
 """
-import sys
+import itertools
 import time
 
+import jax
 import numpy as np
-import jax.numpy as jnp
 
-sys.path.insert(0, "src")
-
-from repro.core.gee import gee, gee_refine           # noqa: E402
-from repro.core.ref_python import gee_numpy          # noqa: E402
-from repro.graph.edges import make_labels            # noqa: E402
-from repro.graph.generators import sbm               # noqa: E402
-import jax                                           # noqa: E402
+from repro.encoder import Embedder, EncoderConfig
+from repro.graph.edges import make_labels
+from repro.graph.generators import sbm
 
 
 def main():
@@ -26,35 +27,34 @@ def main():
     print(f"graph: n={n:,} s={s:,} K={K}, 10% labeled")
 
     # --- 2. one-pass semi-supervised embedding -------------------------
-    uj, vj, wj, Yj = map(jnp.asarray, (g.u, g.v, g.w, Y))
-    Z = gee(uj, vj, wj, Yj, K=K, n=n)              # (n, K)
-    Z.block_until_ready()
+    cfg = EncoderConfig(K=K)
+    emb = Embedder(cfg, backend="xla").fit(g, Y)      # plan + embed
     t0 = time.perf_counter()
-    Z = gee(uj, vj, wj, Yj, K=K, n=n)
-    Z.block_until_ready()
+    emb.refit(Y)                   # cached plan: no host re-packing
+    jax.block_until_ready(emb.Z_)
     t_xla = time.perf_counter() - t0
 
+    ref = Embedder(cfg, backend="numpy")
     t0 = time.perf_counter()
-    Z_np = gee_numpy(g.u, g.v, g.w, Y, K, n)
+    ref.fit(g, Y)
     t_np = time.perf_counter() - t0
+    diff = np.abs(emb.transform() - ref.transform()).max()
     print(f"gee (XLA jit): {t_xla*1e3:8.2f} ms   "
           f"({s/t_xla/1e6:.1f} M edges/s)")
     print(f"gee (numpy)  : {t_np*1e3:8.2f} ms   speedup "
-          f"{t_np/t_xla:.1f}x, max|diff| "
-          f"{np.abs(np.asarray(Z)-Z_np).max():.2e}")
+          f"{t_np/t_xla:.1f}x, max|diff| {diff:.2e}")
 
     # --- 3. classify unlabeled nodes by argmax --------------------------
-    pred = np.asarray(Z).argmax(1)
+    pred = emb.predict()
     mask = Y < 0
     acc = (pred[mask] == truth[mask]).mean()
     print(f"unlabeled-node accuracy (argmax Z): {acc:.3f}")
 
     # --- 4. fully unsupervised refinement --------------------------------
-    Y0 = jnp.full((n,), -1, jnp.int32)
-    Z2, labels = gee_refine(uj, vj, wj, Y0, jax.random.PRNGKey(0),
-                            K=K, n=n, iters=6)
-    import itertools
-    labels = np.asarray(labels)
+    emb2 = Embedder(EncoderConfig(K=K, refine_iters=6), backend="xla")
+    emb2.fit(g, np.full(n, -1, np.int32))
+    emb2.refine(jax.random.PRNGKey(0))
+    labels = emb2.labels_
     best = max((labels == np.asarray(p)[truth]).mean()
                for p in itertools.permutations(range(K)))
     print(f"unsupervised refinement purity:     {best:.3f}")

@@ -1,7 +1,7 @@
 """Online GEE walkthrough: stand up the embedding service, mutate the
 graph live, query it, and watch the version/epoch model in action.
 
-    PYTHONPATH=src python examples/serve_gee.py
+    python examples/serve_gee.py
 
 Story line:
   1. Build an SBM graph, reveal 10% of the true labels, start the
@@ -15,18 +15,13 @@ Story line:
   5. Compact: the delta log folds into the base multiset and the
      embedding is rebuilt fresh.
 """
-import sys
-
 import numpy as np
 import jax.numpy as jnp
 
-sys.path.insert(0, "src")
-
-from repro.core.gee import gee                           # noqa: E402
-from repro.graph.edges import make_labels                # noqa: E402
-from repro.graph.generators import sbm                   # noqa: E402
-from repro.serving import (EmbeddingService, GraphStore,  # noqa: E402
-                           MicroBatcher)
+from repro.encoder import Embedder, EncoderConfig
+from repro.graph.edges import make_labels
+from repro.graph.generators import sbm
+from repro.serving import EmbeddingService, GraphStore, MicroBatcher
 
 n, K, s = 1500, 6, 30_000
 rng = np.random.default_rng(0)
@@ -51,11 +46,10 @@ print(f"after 2 edge deltas: version={service.version} "
       f"epoch={service.epoch} (no rebuild — deltas are exact)")
 
 # prove exactness: from-scratch embed of the live multiset
-live = store.edges()
-Z_ref = gee(jnp.asarray(live.u), jnp.asarray(live.v), jnp.asarray(live.w),
-            jnp.asarray(service.Y_epoch), K=K, n=n)
+scratch = Embedder(EncoderConfig(K=K), backend="xla")
+scratch.fit(store.edges(), service.Y_epoch)
 print(f"max|Z_delta - Z_scratch| = "
-      f"{float(jnp.max(jnp.abs(Z_ref - service.Z))):.2e}")
+      f"{float(jnp.max(jnp.abs(scratch.Z_ - service.Z))):.2e}")
 
 # -- 3. batched queries ---------------------------------------------------
 t_embed = batcher.submit("embed", rng.integers(0, n, 32))

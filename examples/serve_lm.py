@@ -2,14 +2,10 @@
 greedily with the shared donated KV cache (the decode_32k dry-run cells
 run exactly this step function at production shapes).
 
-    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b
+    python examples/serve_lm.py --arch zamba2-1.2b
 """
 import argparse
-import sys
-
-sys.path.insert(0, "src")
-
-from repro.launch.serve import main as serve_main        # noqa: E402
+from repro.launch.serve import main as serve_main
 
 
 def main():

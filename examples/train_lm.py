@@ -2,23 +2,18 @@
 steps through the full production loop (sharded step, checkpoints,
 heartbeats, data pipeline).
 
-    PYTHONPATH=src python examples/train_lm.py               # ~25M demo
-    PYTHONPATH=src python examples/train_lm.py --full-100m   # the real one
+    python examples/train_lm.py               # ~25M demo
+    python examples/train_lm.py --full-100m   # the real one
 
 The 25M default finishes on this single-core CPU container in minutes;
 --full-100m is the deliverable configuration (same code path, bigger
 dims) — on TPU it is a per-chip triviality, on 1 CPU core budget ~1 hr.
 """
 import argparse
-import dataclasses
-import sys
 
-sys.path.insert(0, "src")
-
-from repro.configs.base import ModelConfig               # noqa: E402
-from repro.configs import _REGISTRY                      # noqa: E402
-import repro.configs as C                                # noqa: E402
-from repro.models import model as M                      # noqa: E402
+from repro.configs.base import ModelConfig
+from repro.configs import _REGISTRY
+from repro.models import model as M
 
 
 def demo_config(full: bool) -> ModelConfig:

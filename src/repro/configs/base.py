@@ -7,8 +7,7 @@ device state (required for the dry-run's XLA_FLAGS ordering).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 

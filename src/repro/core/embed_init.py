@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gee import gee, gee_refine
+from repro.core.gee import gee_refine
 from repro.graph.edges import Graph
 
 

@@ -49,15 +49,21 @@ def edge_contributions(u, v, w, Y, Wv):
 
 @functools.partial(jax.jit, static_argnames=("K", "n", "laplacian"))
 def gee(u, v, w, Y, *, K: int, n: int, laplacian: bool = False,
-        deg: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-    """One-pass GEE embedding. Returns Z (n, K) float32."""
+        deg: Optional[jnp.ndarray] = None,
+        Wv: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """One-pass GEE embedding. Returns Z (n, K) float32.
+
+    Wv: optional precomputed projection weights (callers that own the
+    weights — `repro.encoder.Embedder` — pass them; default derives
+    them from Y, like the optional `deg` precompute)."""
     w = w.astype(jnp.float32)
     if laplacian:
         if deg is None:
             deg = (jnp.zeros(n, jnp.float32).at[u].add(w).at[v].add(w))
         scale = jax.lax.rsqrt(jnp.maximum(deg, 1.0))
         w = w * scale[u] * scale[v]
-    Wv = make_w(Y, K)
+    if Wv is None:
+        Wv = make_w(Y, K)
     dst, cls, val = edge_contributions(u, v, w, Y, Wv)
     return jnp.zeros((n, K), jnp.float32).at[dst, cls].add(val)
 
@@ -92,10 +98,13 @@ def gee_apply_delta(Z, u, v, w, Y, Wv, *, K: int, sign: float = 1.0):
     return Z.at[dst, cls].add(sign * val)
 
 
-def gee_streaming(chunks, Y, *, K: int, n: int):
+def gee_streaming(chunks, Y, *, K: int, n: int,
+                  Wv: Optional[jnp.ndarray] = None):
     """Single-pass streaming embed over an iterator of (u, v, w) chunks —
-    the out-of-core ingestion path (pairs with graph.io.ShardedEdgeReader)."""
-    Wv = make_w(Y, K)
+    the out-of-core ingestion path (pairs with graph.io.ShardedEdgeReader).
+    Wv: optional owned projection weights, as in `gee`."""
+    if Wv is None:
+        Wv = make_w(Y, K)
     Z = jnp.zeros((n, K), jnp.float32)
     for (u, v, w) in chunks:
         Z = gee_apply_delta(Z, u, v, w, Y, Wv, K=K)
@@ -120,6 +129,19 @@ def _kmeans_update(Z, labels, K):
     return sums / jnp.maximum(counts, 1.0)
 
 
+def kmeans_refine_round(Z, labels, Y0, K: int, kmeans_iters: int):
+    """One refinement round's label update: row-normalize Z, k-means,
+    reassign with the supervised labels in Y0 pinned.  THE one copy of
+    the refinement math — shared by `gee_refine` and
+    `repro.encoder.Embedder.refine`."""
+    Zn = Z / jnp.maximum(jnp.linalg.norm(Z, axis=1, keepdims=True), 1e-9)
+    centers = _kmeans_update(Zn, labels, K)
+    for _ in range(kmeans_iters):
+        assign = _kmeans_assign(Zn, centers)
+        centers = _kmeans_update(Zn, assign, K)
+    return jnp.where(Y0 >= 0, Y0, assign)
+
+
 @functools.partial(jax.jit, static_argnames=("K", "n", "iters", "kmeans_iters"))
 def gee_refine(u, v, w, Y0, key, *, K: int, n: int, iters: int = 10,
                kmeans_iters: int = 3):
@@ -131,13 +153,7 @@ def gee_refine(u, v, w, Y0, key, *, K: int, n: int, iters: int = 10,
 
     def body(labels, _):
         Z = gee(u, v, w, labels, K=K, n=n)
-        Zn = Z / jnp.maximum(jnp.linalg.norm(Z, axis=1, keepdims=True), 1e-9)
-        centers = _kmeans_update(Zn, labels, K)
-        for _ in range(kmeans_iters):
-            assign = _kmeans_assign(Zn, centers)
-            centers = _kmeans_update(Zn, assign, K)
-        # keep supervised labels pinned
-        labels = jnp.where(Y0 >= 0, Y0, assign)
+        labels = kmeans_refine_round(Z, labels, Y0, K, kmeans_iters)
         return labels, None
 
     labels, _ = jax.lax.scan(body, labels, None, length=iters)

@@ -1,0 +1,24 @@
+"""repro.encoder — the unified GEE embedding API (the one front door).
+
+    from repro.encoder import Embedder, EncoderConfig
+
+    emb = Embedder(EncoderConfig(K=5), backend="xla").fit(graph, Y)
+    Z   = emb.transform()
+    emb.partial_fit(delta)        # exact O(batch) update
+    emb.refit(new_Y)              # cached plan, no host re-packing
+
+Backends (select by name, register new ones with `register_backend`):
+numpy, xla, pallas, streaming, distributed:{replicated, reduce_scatter,
+a2a, ring}.  All produce the same Z (see tests/test_encoder.py's
+cross-backend conformance suite); they differ only in where the work
+runs.  The legacy per-strategy functions remain as internals under
+`repro.core` / `repro.kernels`.
+"""
+from repro.encoder.backends import (Backend, get_backend, list_backends,
+                                    register_backend)
+from repro.encoder.config import EncoderConfig
+from repro.encoder.embedder import Embedder, NotFittedError
+from repro.encoder.plan import Plan
+
+__all__ = ["Backend", "Embedder", "EncoderConfig", "NotFittedError",
+           "Plan", "get_backend", "list_backends", "register_backend"]

@@ -1,0 +1,234 @@
+"""Backend registry: every execution strategy behind one interface.
+
+A backend turns a `Plan` plus the *current* labels into Z.  All of them
+compute the same mathematical object (conformance-tested); they differ
+in where the scatter runs and how contributions move:
+
+  numpy           `ref_python.gee_numpy` — the compiled-serial oracle.
+  xla             `core.gee` — jitted XLA scatter-add (CPU/GPU/TPU).
+  pallas          `kernels.gee_scatter` — destination-tiled one-hot
+                  matmul; edges packed ONCE at plan time by destination
+                  tile with their *source node* (not class), so label
+                  changes re-resolve on device and never re-pack.
+  streaming       chunked accumulate (O(chunk) device memory) —
+                  the out-of-core / serving-rebuild path.
+  distributed:M   `core.distributed.gee_sharded` for M in
+                  {replicated, reduce_scatter, a2a, ring} — SPMD
+                  collectives; the plan pads edges/rows to the mesh and
+                  measures the exact zero-drop capacity factor once.
+
+Register new strategies with ``@register_backend("name")``; callers
+select them by name through ``Embedder(..., backend="name")`` without
+touching any call site.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple, Type
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.encoder.config import EncoderConfig
+from repro.encoder.plan import Plan, effective_weights
+from repro.graph.edges import Graph
+
+_REGISTRY: Dict[str, Type["Backend"]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: make a Backend constructible by name."""
+    def deco(cls: Type["Backend"]) -> Type["Backend"]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_backend(name: str) -> "Backend":
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; registered: "
+                       f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def list_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+class Backend:
+    """One execution strategy: label-free `plan`, label-dependent `embed`."""
+
+    name: str = "?"
+    #: scatter-path backends reproduce the oracle to float tolerance;
+    #: bucketed collective modes additionally depend on capacity padding.
+    exact: bool = True
+
+    def _base(self, graph: Graph, config: EncoderConfig) -> Plan:
+        return Plan(backend=self.name, config=config, n=graph.n, s=graph.s,
+                    w_eff=effective_weights(graph, config),
+                    **Plan.anchors(graph))
+
+    def plan(self, graph: Graph, config: EncoderConfig, *,
+             mesh=None) -> Plan:
+        raise NotImplementedError
+
+    def embed(self, plan: Plan, Yj: jnp.ndarray, Wv: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, dict]:
+        """Return (Z (n, K) float32, info dict)."""
+        raise NotImplementedError
+
+
+@register_backend("numpy")
+class NumpyBackend(Backend):
+    """`ref_python.gee_numpy`: the host-side oracle every other backend
+    is conformance-checked against."""
+
+    def plan(self, graph, config, *, mesh=None):
+        p = self._base(graph, config)
+        p.data = {"u": np.asarray(graph.u), "v": np.asarray(graph.v)}
+        return p
+
+    def embed(self, plan, Yj, Wv):
+        from repro.core.ref_python import gee_numpy
+        Y = np.asarray(Yj)
+        Z = gee_numpy(plan.data["u"], plan.data["v"], plan.w_eff, Y,
+                      plan.config.K, plan.n)
+        return jnp.asarray(Z), {}
+
+
+@register_backend("xla")
+class XlaBackend(Backend):
+    """`core.gee` (jitted XLA scatter-add) — the single-device hot
+    path.  Passes the Embedder-owned Wv through `gee`'s precompute
+    parameter instead of re-deriving it from Y."""
+
+    def plan(self, graph, config, *, mesh=None):
+        p = self._base(graph, config)
+        p.data = {"u": jnp.asarray(graph.u), "v": jnp.asarray(graph.v),
+                  "w": jnp.asarray(p.w_eff)}
+        return p
+
+    def embed(self, plan, Yj, Wv):
+        from repro.core.gee import gee
+        d = plan.data
+        Z = gee(d["u"], d["v"], d["w"], Yj, K=plan.config.K, n=plan.n,
+                Wv=Wv)
+        return Z, {}
+
+
+@register_backend("pallas")
+class PallasBackend(Backend):
+    """Destination-tiled one-hot matmul kernel.
+
+    The plan packs (tile-local row, source node, weight) — all
+    label-free — so refits resolve classes/values on device from the
+    current (Y, Wv) and skip the O(s log s) host sort entirely.  Padded
+    slots carry w = 0 and are no-ops for any labeling.
+    """
+
+    def plan(self, graph, config, *, mesh=None):
+        from repro.kernels.ops import _round_up, pack_edges
+        p = self._base(graph, config)
+        u, v = np.asarray(graph.u), np.asarray(graph.v)
+        dst = np.concatenate([u, v])
+        src = np.concatenate([v, u])          # label donor
+        w2 = np.concatenate([p.w_eff, p.w_eff])
+        rows, srcb, wb, T = pack_edges(dst, src, w2, graph.n,
+                                       config.tile_n, config.edge_block)
+        p.data = {"rows": jnp.asarray(rows), "src": jnp.asarray(srcb),
+                  "w": jnp.asarray(wb), "T": T,
+                  "kdim": _round_up(config.K, 8)}
+        return p
+
+    def embed(self, plan, Yj, Wv):
+        from repro.kernels.gee_scatter import gee_scatter_pallas
+        d, cfg = plan.data, plan.config
+        Ys = Yj[d["src"]]
+        cls = jnp.maximum(Ys, 0)
+        val = jnp.where(Ys >= 0, Wv[d["src"]] * d["w"], 0.0)
+        Z = gee_scatter_pallas(d["rows"], cls, val, num_tiles=d["T"],
+                               tile_n=cfg.tile_n, kdim=d["kdim"],
+                               interpret=cfg.interpret)
+        return Z[:plan.n, :cfg.K], {}
+
+
+@register_backend("streaming")
+class StreamingBackend(Backend):
+    """`gee_streaming`'s accumulate loop over bucket-padded chunks, with
+    the Embedder-owned Wv: bounded DEVICE working set — each chunk is
+    uploaded, folded into Z, and released, so only O(chunk) edge data
+    plus Z ever lives on device (the serving-rebuild and out-of-core
+    ingestion path).  Chunks stay host-side in the plan (non-tail
+    chunks are views of the caller's arrays, not copies)."""
+
+    def plan(self, graph, config, *, mesh=None):
+        from repro.graph.edges import chunk_edges
+        p = self._base(graph, config)
+        p.data = {"chunks": list(chunk_edges(
+            np.asarray(graph.u, np.int32), np.asarray(graph.v, np.int32),
+            p.w_eff, config.chunk_size))}
+        return p
+
+    def embed(self, plan, Yj, Wv):
+        from repro.core.gee import gee_streaming
+        cfg = plan.config
+        Z = gee_streaming(
+            ((jnp.asarray(u), jnp.asarray(v), jnp.asarray(w))
+             for (u, v, w) in plan.data["chunks"]),
+            Yj, K=cfg.K, n=plan.n, Wv=Wv)
+        return Z, {"chunks": len(plan.data["chunks"])}
+
+
+class DistributedBackend(Backend):
+    """SPMD collectives over the edge mesh (`core.distributed`).
+
+    The plan pads edges and rows to the mesh, places the padded arrays,
+    and — for bucketed modes — measures the exact zero-drop capacity
+    factor from the owner histogram (an O(s) host pass now done once
+    instead of per fit).
+    """
+
+    mode = "ring"
+    exact = False          # bucketed modes depend on capacity padding
+
+    def plan(self, graph, config, *, mesh=None):
+        from repro.core.distributed import (edge_mesh,
+                                            exact_capacity_factor,
+                                            pad_rows)
+        p = self._base(graph, config)
+        mesh = mesh if mesh is not None else edge_mesh()
+        nd = mesh.devices.size
+        cf = config.capacity_factor
+        if cf is None and self.mode in ("a2a", "ring"):
+            cf = exact_capacity_factor(graph, nd)
+        n_pad = pad_rows(graph.n, nd)
+        s_pad = pad_rows(graph.s, nd)
+        g = Graph(np.asarray(graph.u), np.asarray(graph.v), p.w_eff,
+                  graph.n).pad_to(s_pad)
+        p.data = {"mesh": mesh, "n_pad": n_pad,
+                  "capacity_factor": cf if cf is not None else 2.0,
+                  "u": jnp.asarray(g.u), "v": jnp.asarray(g.v),
+                  "w": jnp.asarray(g.w)}
+        return p
+
+    def embed(self, plan, Yj, Wv):
+        from repro.core.distributed import gee_sharded
+        d, cfg = plan.data, plan.config
+        Y_pad = jnp.concatenate([
+            Yj, jnp.full(d["n_pad"] - plan.n, -1, jnp.int32)])
+        Z, dropped = gee_sharded(
+            d["u"], d["v"], d["w"], Y_pad, K=cfg.K, n=d["n_pad"],
+            mesh=d["mesh"], mode=self.mode,
+            capacity_factor=d["capacity_factor"])
+        return Z[:plan.n], {"dropped": int(dropped)}
+
+
+for _mode in ("replicated", "reduce_scatter", "a2a", "ring"):
+    # replicated / reduce_scatter are pure scatter+collective paths
+    # (float-exact); a2a / ring bucket with capacity padding.
+    register_backend(f"distributed:{_mode}")(
+        type(f"Distributed{_mode.title().replace('_', '')}Backend",
+             (DistributedBackend,),
+             {"mode": _mode,
+              "exact": _mode in ("replicated", "reduce_scatter")}))

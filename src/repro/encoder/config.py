@@ -1,0 +1,61 @@
+"""EncoderConfig: everything about *what* to compute, none of *how*.
+
+The paper's algorithm has one mathematical definition (Z = scatter-add
+of per-edge label contributions) and many execution strategies.  The
+config captures the math-level choices — number of classes, Laplacian
+scaling, refinement schedule, output dtype — plus the per-backend
+tuning knobs (tile sizes, chunk sizes, capacity factors) that change
+performance but never the answer.  Frozen and hashable so plans can be
+keyed on it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Configuration for :class:`repro.encoder.Embedder`.
+
+    Math-level options (change Z):
+      K           number of classes / embedding dimension.
+      laplacian   GEE paper's Laplacian scaling w' = w/sqrt(deg_u*deg_v).
+                  Applied once at plan time (degrees are label-free), so
+                  every backend sees pre-scaled weights.
+      dtype       output dtype of ``transform`` ("float32"/"bfloat16"/...).
+                  Z is always accumulated in float32.
+
+    Refinement (unsupervised GEE clustering, ``Embedder.refine``):
+      refine_iters   embed -> k-means -> reassign rounds.
+      kmeans_iters   k-means steps per round.
+
+    Backend tuning (never change Z, only speed/memory):
+      tile_n, edge_block, interpret   Pallas kernel geometry.
+      chunk_size                      streaming chunk length.
+      capacity_factor                 distributed bucket padding; None
+                                      measures the exact zero-drop factor
+                                      from the owner histogram (cached in
+                                      the plan).
+    """
+
+    K: int
+    laplacian: bool = False
+    dtype: str = "float32"
+    # refinement
+    refine_iters: int = 10
+    kmeans_iters: int = 3
+    # pallas
+    tile_n: int = 256
+    edge_block: int = 512
+    interpret: bool = True
+    # streaming
+    chunk_size: int = 1 << 20
+    # distributed
+    capacity_factor: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.K < 1:
+            raise ValueError(f"K must be >= 1, got {self.K}")
+        if self.chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")

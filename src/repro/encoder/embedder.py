@@ -1,0 +1,242 @@
+"""Embedder: the one front door for GEE.
+
+    cfg = EncoderConfig(K=5)
+    emb = Embedder(cfg, backend="xla").fit(graph, Y)
+    Z   = emb.transform()                 # (n, K)
+    emb.partial_fit(delta_graph)          # O(batch) exact update
+    emb.refit(Y_new)                      # reuse the cached plan
+
+Design rules:
+
+* **Backend is configuration.**  Every execution strategy registered in
+  `backends.py` is reachable by name; call sites never import a
+  strategy-specific function again.
+* **plan() is cached.**  The label-free host preprocessing (Laplacian
+  degrees, padding, Pallas destination packing, distributed capacity
+  measurement) runs once per edge multiset; `refit` and repeated `fit`
+  on the same arrays skip it (`plan_stats` proves it, the encoder
+  benchmark measures it).
+* **The Embedder owns the projection weights.**  `make_w(Y, K)` is
+  computed at fit time and used by every subsequent `partial_fit`, so
+  the raw `gee_apply_delta` contract — "Wv must be the weights Z was
+  built with" — can no longer be violated by a caller holding a stale
+  or foreign Wv.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import functools
+
+from repro.core.gee import (gee_apply_delta, kmeans_refine_round, make_w)
+from repro.encoder.backends import Backend, get_backend
+from repro.encoder.config import EncoderConfig
+from repro.encoder.plan import Plan
+from repro.graph.edges import Graph, bucket_size
+
+
+class NotFittedError(RuntimeError):
+    pass
+
+
+@functools.partial(jax.jit, static_argnames=("K", "kmeans_iters"))
+def _kmeans_reassign(Z, labels, Y0, *, K: int, kmeans_iters: int):
+    """Jitted wrapper over the shared `core.gee.kmeans_refine_round`."""
+    return kmeans_refine_round(Z, labels, Y0, K, kmeans_iters)
+
+
+class Embedder:
+    """Unified GEE embedding API over pluggable backends.
+
+    Fitted state (sklearn-style trailing underscore):
+      Z_        (n, K) float32 embedding (device array).
+      labels_   the labels Z was built under (int32, -1 = unknown).
+      Wv_       per-node projection weights Z was built with.
+    """
+
+    def __init__(self, config: EncoderConfig, *, backend: str = "xla",
+                 mesh=None):
+        self.config = config
+        self.backend: Backend = get_backend(backend)
+        self.mesh = mesh
+        self._plan: Optional[Plan] = None
+        self._deltas_applied = 0       # partial_fits since last _embed
+        self._Yj = self._Yfit = None
+        self.Z_: Optional[jnp.ndarray] = None
+        self.labels_: Optional[np.ndarray] = None
+        self.Wv_: Optional[jnp.ndarray] = None
+        self.last_info_: dict = {}
+        self.plan_stats = {"built": 0, "hits": 0}
+
+    # -- planning ----------------------------------------------------------
+
+    def plan(self, graph: Graph) -> Plan:
+        """Build (or reuse) the label-free preprocessing for `graph`.
+
+        Cache hits are O(1): the plan matches iff it was built against
+        the very same edge arrays — a changed multiset means new arrays
+        and a rebuild, same arrays (refinement rounds, serving rebuilds
+        off a quiet store, benchmark repeats) skip all host packing.
+        """
+        if self._plan is not None and self._plan.matches(
+                graph, self.backend.name, self.config):
+            self.plan_stats["hits"] += 1
+            return self._plan
+        graph.validate()
+        if self.Z_ is not None:
+            # the fitted state belonged to the OLD plan's graph; keeping
+            # it would let refit()/transform() serve stale or mismatched
+            # results against the new plan
+            self.Z_ = self.labels_ = self.Wv_ = None
+            self._Yj = self._Yfit = None
+            self._deltas_applied = 0
+            self.last_info_ = {}
+        self._plan = self.backend.plan(graph, self.config, mesh=self.mesh)
+        self.plan_stats["built"] += 1
+        return self._plan
+
+    # -- fitting -----------------------------------------------------------
+
+    def fit(self, graph: Graph, Y) -> "Embedder":
+        """Embed `graph` under labels `Y` (int, -1 = unknown)."""
+        plan = self.plan(graph)
+        return self._embed(plan, Y)
+
+    def refit(self, Y=None) -> "Embedder":
+        """Re-embed under new labels, reusing the cached plan (no host
+        packing).  Y=None re-runs with the current labels.
+
+        Refuses to run after `partial_fit`: the cached plan holds the
+        ORIGINAL edge multiset, so a refit would silently drop every
+        applied delta — fit() on the live graph instead (serving does
+        exactly that on rebuild)."""
+        if self._plan is None or self.Z_ is None:
+            raise NotFittedError(
+                "refit() requires a fitted state for the cached plan "
+                "(fit() first; a plan() on a different graph clears it)")
+        self._check_no_pending_deltas("refit")
+        self.plan_stats["hits"] += 1
+        return self._embed(self._plan, self.labels_ if Y is None else Y)
+
+    def _check_no_pending_deltas(self, what: str) -> None:
+        if self._deltas_applied:
+            raise RuntimeError(
+                f"{what}() after {self._deltas_applied} partial_fit(s) "
+                "would re-embed the plan's ORIGINAL edge multiset and "
+                "silently discard the applied deltas; fit() on the "
+                "live graph instead")
+
+    def _embed(self, plan: Plan, Y) -> "Embedder":
+        Y = np.asarray(Y, np.int32)
+        if Y.shape != (plan.n,):
+            raise ValueError(f"Y shape {Y.shape} != ({plan.n},)")
+        if Y.size and Y.max() >= self.config.K:
+            raise ValueError(f"label {Y.max()} >= K={self.config.K}")
+        self.labels_ = Y.copy()
+        self._Yj = jnp.asarray(Y)
+        self._Yfit = self._Yj       # supervised set: pinned by refine()
+        self.Wv_ = make_w(self._Yj, self.config.K)
+        self.Z_, self.last_info_ = self.backend.embed(plan, self._Yj,
+                                                      self.Wv_)
+        self._deltas_applied = 0
+        return self
+
+    def partial_fit(self, delta: Graph, *, sign: float = 1.0
+                    ) -> "Embedder":
+        """Fold an edge delta into Z exactly (GEE is linear in the edge
+        multiset).  sign=+1 inserts, sign=-1 deletes.  Uses the OWNED
+        (labels_, Wv_) pair, so the Wv-mismatch footgun of calling
+        `gee_apply_delta` directly cannot occur.  Batches are padded to
+        power-of-two buckets: one jit compile per bucket size."""
+        if self.Z_ is None:
+            raise NotFittedError("partial_fit() before fit()")
+        if self.config.laplacian:
+            raise ValueError(
+                "partial_fit is exact only for laplacian=False: degree "
+                "scaling makes Z nonlinear in the edge multiset — refit "
+                "on the updated graph instead")
+        if delta.n != self.n_:
+            raise ValueError(f"delta graph has n={delta.n}, fitted "
+                             f"n={self.n_}")
+        delta.validate()
+        if delta.s == 0:
+            return self
+        padded = delta.pad_to(bucket_size(delta.s))
+        self.Z_ = gee_apply_delta(
+            self.Z_, jnp.asarray(padded.u), jnp.asarray(padded.v),
+            jnp.asarray(padded.w), self._Yj, self.Wv_,
+            K=self.config.K, sign=sign)
+        self._deltas_applied += 1
+        return self
+
+    # -- refinement --------------------------------------------------------
+
+    def refine(self, key=None) -> "Embedder":
+        """Unsupervised GEE clustering (embed -> k-means -> reassign,
+        `config.refine_iters` rounds).  Known labels in `labels_` stay
+        pinned; unknowns bootstrap randomly.  Updates Z_ and labels_.
+
+        Each round's embed dispatches through the CONFIGURED backend
+        against the cached plan (labels are the only thing that changes
+        round to round — exactly the plan/embed split), so refinement
+        keeps the backend's memory/placement properties instead of
+        falling back to a single-device full-graph pass."""
+        if self._plan is None or self._Yfit is None:
+            raise NotFittedError("refine() before fit()")
+        self._check_no_pending_deltas("refine")
+        key = jax.random.PRNGKey(0) if key is None else key
+        cfg = self.config
+        # pin only the labels SUPERVISED at fit time — not a previous
+        # refine()'s assignments, so repeated refines re-bootstrap the
+        # unknowns instead of freezing on round one's clustering
+        Y0 = self._Yfit
+        rand = jax.random.randint(key, (self._plan.n,), 0, cfg.K,
+                                  jnp.int32)
+        labels = jnp.where(Y0 >= 0, Y0, rand)
+        for _ in range(cfg.refine_iters):
+            Z, _ = self.backend.embed(self._plan, labels,
+                                      make_w(labels, cfg.K))
+            labels = _kmeans_reassign(Z, labels, Y0, K=cfg.K,
+                                      kmeans_iters=cfg.kmeans_iters)
+        self.labels_ = np.asarray(labels)
+        self._Yj = labels
+        self.Wv_ = make_w(labels, cfg.K)
+        self.Z_, self.last_info_ = self.backend.embed(self._plan, labels,
+                                                      self.Wv_)
+        return self
+
+    # -- queries -----------------------------------------------------------
+
+    @property
+    def n_(self) -> int:
+        if self._plan is None:
+            raise NotFittedError("not fitted")
+        return self._plan.n
+
+    def _rows(self, nodes):
+        """Z rows for `nodes`, bounds-checked (jnp gather would silently
+        CLAMP out-of-range ids — a stale node id must raise, not return
+        a plausible wrong row)."""
+        if self.Z_ is None:
+            raise NotFittedError("not fitted")
+        if nodes is None:
+            return self.Z_
+        nodes = np.asarray(nodes)
+        if nodes.size and (nodes.min() < 0 or nodes.max() >= self.n_):
+            raise IndexError(f"node ids must be in [0, {self.n_}), got "
+                             f"range [{nodes.min()}, {nodes.max()}]")
+        return self.Z_[jnp.asarray(nodes)]
+
+    def transform(self, nodes=None) -> np.ndarray:
+        """Z rows for `nodes` (all rows if None), in config.dtype."""
+        Z = self._rows(nodes)
+        return np.asarray(Z.astype(jnp.dtype(self.config.dtype)))
+
+    def predict(self, nodes=None) -> np.ndarray:
+        """argmax-Z class prediction for `nodes` (all nodes if None)."""
+        Z = self._rows(nodes)
+        return np.asarray(jnp.argmax(Z, axis=1).astype(jnp.int32))

@@ -1,0 +1,74 @@
+"""Plan: the cached, label-independent half of an embedding.
+
+Every GEE backend splits into two phases:
+
+  1. **plan** — host-side preprocessing that depends only on the edge
+     multiset and the config: Laplacian degree precompute + weight
+     scaling, padding, destination-tile packing (Pallas), owner-bucket
+     capacity measurement and edge padding (distributed), chunking
+     (streaming), device placement.  O(s) to O(s log s).
+  2. **embed** — the label-dependent pass: resolve per-edge classes and
+     projection weights from the *current* Y and scatter.  O(s) device
+     work, no host packing.
+
+The split is what makes refits cheap: labels change every refinement
+round and every serving epoch, the edge multiset does not.  A `Plan`
+therefore carries only label-free artifacts and is reused across
+`fit`/`refit` calls on the same graph (matched by array identity —
+O(1), no content hashing; a new edge multiset means new arrays means a
+new plan).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.encoder.config import EncoderConfig
+from repro.graph.edges import Graph
+
+
+def effective_weights(graph: Graph, config: EncoderConfig) -> np.ndarray:
+    """Laplacian-scaled weights, computed ONCE per plan.
+
+    Degrees come from the **unpadded** graph in float64 (`Graph.degrees`)
+    so backend-specific padding can never perturb the normalizer; all
+    backends then run the plain (laplacian=False) kernel on w_eff and
+    agree on Z by construction.
+    """
+    w = np.asarray(graph.w, np.float32)
+    if not config.laplacian:
+        return w
+    deg = graph.degrees()
+    scale = 1.0 / np.sqrt(np.maximum(deg, 1.0), dtype=np.float64)
+    w_eff = (w.astype(np.float64) * scale[graph.u] * scale[graph.v])
+    return w_eff.astype(np.float32)
+
+
+@dataclass
+class Plan:
+    """Cached per-backend preprocessing for one (graph, config) pair."""
+
+    backend: str
+    config: EncoderConfig
+    n: int
+    s: int
+    w_eff: np.ndarray                   # laplacian-scaled edge weights
+    data: Dict[str, Any] = field(default_factory=dict)
+    # identity anchors for O(1) cache matching
+    _u: Optional[np.ndarray] = None
+    _v: Optional[np.ndarray] = None
+    _w: Optional[np.ndarray] = None
+
+    @classmethod
+    def anchors(cls, graph: Graph) -> dict:
+        return {"_u": graph.u, "_v": graph.v, "_w": graph.w}
+
+    def matches(self, graph: Graph, backend: str,
+                config: EncoderConfig) -> bool:
+        """True iff this plan was built for exactly these arrays."""
+        return (self.backend == backend and self.config == config
+                and self.n == graph.n
+                and self._u is graph.u and self._v is graph.v
+                and self._w is graph.w)

@@ -52,14 +52,56 @@ class Graph:
         return Graph(self.u[p], self.v[p], self.w[p], self.n)
 
     def pad_to(self, s_pad: int) -> "Graph":
-        """Pad with zero-weight self-loops of node 0 (no-op edges)."""
+        """Pad with zero-weight self-loops of node 0 (no-op edges).
+
+        Contract (regression-tested): padding preserves `n` and is
+        invisible to every downstream consumer — `degrees()` and the
+        Laplacian `deg` precompute are unchanged (the pad edges carry
+        w = 0 exactly, so they add nothing to either endpoint), and Z
+        is unchanged for any labeling (a zero-weight contribution is a
+        no-op regardless of node 0's label)."""
         extra = s_pad - self.s
         assert extra >= 0
-        z = np.zeros(extra, self.u.dtype)
-        return Graph(np.concatenate([self.u, z]),
-                     np.concatenate([self.v, z]),
-                     np.concatenate([self.w, np.zeros(extra, np.float32)]),
+        if extra == 0:
+            return self
+        assert self.n >= 1, "cannot pad a graph with no nodes"
+        z = np.zeros(extra, np.int32)
+        return Graph(np.concatenate([np.asarray(self.u, np.int32), z]),
+                     np.concatenate([np.asarray(self.v, np.int32), z]),
+                     np.concatenate([np.asarray(self.w, np.float32),
+                                     np.zeros(extra, np.float32)]),
                      self.n)
+
+
+def bucket_size(size: int, floor: int = 256) -> int:
+    """Next power-of-two >= size (>= floor) — the shared batch-padding
+    policy that keeps jitted kernels at one compile per bucket, not per
+    batch size (used by the encoder's delta path and the serving store)."""
+    b = floor
+    while b < size:
+        b <<= 1
+    return b
+
+
+def chunk_edges(u: np.ndarray, v: np.ndarray, w: np.ndarray,
+                chunk_size: int, floor: int = 256):
+    """Yield (u, v, w) host chunks of at most `chunk_size` edges; the
+    tail chunk is padded to a power-of-two bucket with zero-weight
+    node-0 self-loops (no-op edges) so chunked consumers reuse jit
+    compilations across changing edge counts.  Non-tail chunks are
+    views (no copy).  THE one chunk-and-pad policy — used by the
+    encoder's streaming backend and the serving store alike."""
+    s = int(u.shape[0])
+    for off in range(0, s, chunk_size):
+        end = min(off + chunk_size, s)
+        m = end - off
+        if m < chunk_size:
+            pad = bucket_size(m, floor) - m
+            yield (np.concatenate([u[off:end], np.zeros(pad, np.int32)]),
+                   np.concatenate([v[off:end], np.zeros(pad, np.int32)]),
+                   np.concatenate([w[off:end], np.zeros(pad, np.float32)]))
+        else:
+            yield u[off:end], v[off:end], w[off:end]
 
 
 def make_labels(n: int, K: int, labeled_frac: float,

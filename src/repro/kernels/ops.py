@@ -9,9 +9,7 @@ performance-irrelevant.
 """
 from __future__ import annotations
 
-import functools
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -29,11 +29,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import SHAPES, get_config, get_shape, list_archs
+from repro.configs import get_config, get_shape, list_archs
 from repro.launch import roofline as RL
 from repro.launch.mesh import make_gee_mesh, make_production_mesh
 from repro.models import model as M
-from repro.sharding import make_rules, spec_tree_shardings, use_sharding
+from repro.sharding import make_rules, use_sharding
 from repro.training.optimizer import AdamW
 from repro.training.train_loop import make_train_step
 
@@ -94,7 +94,6 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                    compress_grads=compress_grads)
             opt_abs = opt.init_abstract(params_abs)
             # opt moments share the param shardings; step is replicated
-            from repro.training.optimizer import AdamWState
             batch_abs = _batch_abstract(cfg, shape, rules)
             lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
                 params_abs, opt_abs, batch_abs)

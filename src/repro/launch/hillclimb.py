@@ -14,7 +14,6 @@ terms under a tag; compare with
     PYTHONPATH=src python -m repro.launch.hillclimb --list
 """
 import argparse
-import json
 
 from repro.launch.dryrun import run_cell, run_gee
 

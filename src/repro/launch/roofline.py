@@ -24,8 +24,8 @@ Hardware model (TPU v5e, per the brief):
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+from dataclasses import dataclass
+from typing import Dict
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

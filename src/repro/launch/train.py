@@ -12,8 +12,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 import time
 
 import jax
@@ -21,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens
+from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.sharding import make_rules, use_sharding

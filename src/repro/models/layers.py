@@ -9,8 +9,6 @@ as a ParamSpec (shape, logical axis names, init rule) so that:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 

@@ -11,18 +11,14 @@
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models import transformer as tfm
-from repro.models import xlstm as xlstm_mod
 from repro.models.layers import (abstract_from_specs, apply_norm, ashard,
                                  count_specs, embed_specs, embed_tokens,
                                  init_from_specs, logical_axes_tree,

@@ -13,9 +13,6 @@ and aux is a scalar (MoE load-balance loss, 0 elsewhere).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import ParamSpec, apply_norm, ashard, norm_specs
+from repro.models.layers import ParamSpec, ashard
 
 _NEG = -1e30
 

@@ -1,18 +1,20 @@
 """Incrementally maintained GEE embedding over a `GraphStore`.
 
-The service owns Z (n, K) and keeps it consistent with the store's
-version counter:
+The service is now a thin epoch/churn policy layer over the unified
+``repro.encoder.Embedder`` (streaming backend): the Embedder owns Z and
+the projection weights Wv, the service owns *when* to rebuild.
 
-* **Edge deltas** fold into Z with `gee_apply_delta` — O(batch) work,
-  exact by linearity, no epoch change.  Batches are padded to
-  power-of-two buckets (zero-weight self-loops are no-op edges) so the
-  jitted kernel compiles once per bucket, not once per batch size.
+* **Edge deltas** fold into Z with `Embedder.partial_fit` — O(batch)
+  work, exact by linearity, no epoch change.  The Embedder pads batches
+  to power-of-two buckets (one jit compile per bucket, not per batch
+  size) and always uses the weights Z was built with, closing the old
+  Wv-mismatch footgun of calling `gee_apply_delta` by hand.
 * **Label deltas** change the projection weights W, which touches every
   edge incident to the affected classes — not expressible as an edge
   delta.  The service keeps serving the previous epoch's Z (exact for
   the epoch's labels) and tracks churn vs. the epoch snapshot; once
-  churn exceeds `rebuild_churn` it re-embeds from scratch with
-  `gee_streaming` and starts a new epoch.
+  churn exceeds `rebuild_churn` it re-embeds from scratch via
+  `Embedder.fit` and starts a new epoch.
 * **Compaction** rewrites the store's base multiset and always ends in
   a rebuild, so epochs also advance on compaction.
 
@@ -21,25 +23,24 @@ from-scratch `gee` over the store's live multiset, to float tolerance.
 """
 from __future__ import annotations
 
-from typing import Optional
-
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gee import gee_apply_delta, gee_streaming, make_w
+from repro.encoder import Embedder, EncoderConfig
 from repro.graph.edges import Graph
 from repro.serving import queries as Q
-from repro.serving.store import GraphStore, bucket_size
+from repro.serving.store import GraphStore
 
 
 class EmbeddingService:
     """Serves Z for a live graph; delta-maintains, rebuilds on churn."""
 
     def __init__(self, store: GraphStore, *, rebuild_churn: float = 0.05,
-                 chunk_size: int = 1 << 20):
+                 chunk_size: int = 1 << 20, backend: str = "streaming"):
         self.store = store
         self.rebuild_churn = float(rebuild_churn)
-        self.chunk_size = int(chunk_size)
+        self.embedder = Embedder(
+            EncoderConfig(K=store.K, chunk_size=int(chunk_size)),
+            backend=backend)
         self.epoch = 0
         self.deltas_applied = 0
         self.rebuilds = 0
@@ -50,15 +51,25 @@ class EmbeddingService:
     def _rebuild(self) -> None:
         """Full re-embed under the store's current labels; new epoch."""
         self.Y_epoch = self.store.Y.copy()
-        Yj = jnp.asarray(self.Y_epoch)
-        self.Wv = make_w(Yj, self.store.K)
-        self._Yj = Yj
-        self.Z = gee_streaming(self.store.chunks(self.chunk_size), Yj,
-                               K=self.store.K, n=self.store.n)
+        self.embedder.fit(self.store.edges(), self.Y_epoch)
         self.version = self.store.version
         self.epoch += 1
         self.rebuilds += 1
         self._invalidate_query_cache()
+
+    @property
+    def Z(self):
+        """The live embedding (owned by the Embedder)."""
+        return self.embedder.Z_
+
+    @property
+    def Wv(self):
+        """Projection weights Z was built with (owned by the Embedder)."""
+        return self.embedder.Wv_
+
+    @property
+    def _Yj(self):
+        return self.embedder._Yj
 
     def _invalidate_query_cache(self) -> None:
         """Derived query state (centroids, normalized Z) is a pure
@@ -92,7 +103,8 @@ class EmbeddingService:
                 "deltas_applied": self.deltas_applied,
                 "rebuilds": self.rebuilds, "churn": self.churn,
                 "log_edges": self.store.log_edges,
-                "base_edges": self.store.base.s}
+                "base_edges": self.store.base.s,
+                "plan_stats": dict(self.embedder.plan_stats)}
 
     # -- writes ------------------------------------------------------------
 
@@ -102,11 +114,8 @@ class EmbeddingService:
         batch = Graph(np.asarray(u, np.int32), np.asarray(v, np.int32),
                       np.asarray(w, np.float32), self.store.n)
         if batch.s:
-            padded = batch.pad_to(bucket_size(batch.s))
-            self.Z = gee_apply_delta(
-                self.Z, jnp.asarray(padded.u), jnp.asarray(padded.v),
-                jnp.asarray(padded.w), self._Yj, self.Wv,
-                K=self.store.K, sign=-1.0 if delete else 1.0)
+            self.embedder.partial_fit(batch,
+                                      sign=-1.0 if delete else 1.0)
             self._invalidate_query_cache()
         self.version = version
         self.deltas_applied += 1

@@ -20,24 +20,13 @@ counters, so a snapshot can be re-served or streamed back through
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional
 
 import numpy as np
 
-from repro.graph.edges import Graph
+from repro.graph.edges import Graph, bucket_size   # noqa: F401 (re-export)
 from repro.graph.io import load_graph, save_graph
 
 _ZERO_W = 1e-12       # coalesced weights below this are dropped
-_MIN_BUCKET = 256
-
-
-def bucket_size(size: int, floor: int = _MIN_BUCKET) -> int:
-    """Next power-of-two >= size (>= floor) — the shared padding policy
-    that keeps jitted kernels at one compile per bucket, not per batch."""
-    b = floor
-    while b < size:
-        b <<= 1
-    return b
 
 
 @dataclass(frozen=True)
@@ -115,26 +104,6 @@ class GraphStore:
             np.concatenate([self.base.v] + [d.v for d in self.edge_log]),
             np.concatenate([self.base.w] + [d.w for d in self.edge_log]),
             self.base.n)
-
-    def chunks(self, chunk_size: int) -> Iterator[tuple]:
-        """(u, v, w) chunks of the live multiset — feeds gee_streaming.
-
-        The tail chunk is padded to a power-of-two bucket with
-        zero-weight node-0 self-loops (no-op edges) so rebuilds reuse
-        jit compilations across changing edge counts, mirroring the
-        write path's bucket policy."""
-        g = self.edges()
-        for off in range(0, g.s, chunk_size):
-            end = min(off + chunk_size, g.s)
-            m = end - off
-            if m < chunk_size:
-                yield tuple(
-                    np.concatenate([a[off:end], pad]) for a, pad in (
-                        (g.u, np.zeros(bucket_size(m) - m, np.int32)),
-                        (g.v, np.zeros(bucket_size(m) - m, np.int32)),
-                        (g.w, np.zeros(bucket_size(m) - m, np.float32))))
-            else:
-                yield g.u[off:end], g.v[off:end], g.w[off:end]
 
     def churn_fraction(self, Y_epoch: np.ndarray) -> float:
         """Fraction of nodes whose label differs from an epoch snapshot."""

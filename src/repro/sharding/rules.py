@@ -18,15 +18,14 @@ roofline table makes the cost of the fallback visible.
 from __future__ import annotations
 
 import contextlib
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import transformer as tfm
-from repro.models.layers import (is_spec, set_activation_sharder,
-                                 tree_map_specs)
+from repro.models.layers import set_activation_sharder, tree_map_specs
 
 DATA_AXES = ("pod", "data")      # FSDP/DP axes (pod present on multi-pod)
 MODEL_AXIS = "model"

@@ -13,7 +13,6 @@ over the pod axis where the sharding dictates.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -36,7 +36,6 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 
 class Heartbeat:

@@ -8,7 +8,6 @@ layout for free).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple, Optional
 

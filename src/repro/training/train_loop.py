@@ -11,8 +11,7 @@ with the next microbatch's compute (the standard DP overlap trick).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

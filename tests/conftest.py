@@ -1,7 +1,6 @@
 # NOTE: no XLA_FLAGS here by design — smoke tests and benches must see
 # the real single CPU device; only launch/dryrun.py (and explicit
 # subprocess tests) request 512 placeholder devices.
-import pytest
 
 
 def pytest_configure(config):

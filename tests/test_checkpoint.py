@@ -1,8 +1,6 @@
 """Checkpointing + fault tolerance: atomicity, resume, async writer,
 crash recovery (subprocess kill), straggler monitor, elastic remesh."""
-import json
 import os
-import signal
 import subprocess
 import sys
 import time

@@ -6,7 +6,6 @@ verify the machinery itself: one real 256-chip cell end-to-end in a
 subprocess (cheap arch), mesh construction, collective parsing, and the
 depth-probe extrapolation math.
 """
-import json
 import os
 import subprocess
 import sys

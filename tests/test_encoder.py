@@ -1,0 +1,325 @@
+"""Cross-backend conformance: every registered backend computes the
+same Z through the unified `repro.encoder.Embedder` front door — exact
+(float-tolerance) for scatter paths, tolerance-bounded with zero drops
+for the capacity-bucketed distributed modes — plus the Embedder
+contract itself: plan caching, owned projection weights, exact
+partial_fit, refinement.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ref_python import gee_numpy
+from repro.encoder import (Embedder, EncoderConfig, NotFittedError,
+                           get_backend, list_backends, register_backend)
+from repro.graph.edges import Graph, make_labels
+from repro.graph.generators import erdos_renyi, sbm
+
+ALL_BACKENDS = list_backends()
+# small kernel geometry so pallas exercises multi-tile packing; small
+# chunks so streaming exercises multi-chunk accumulation
+CFG = dict(tile_n=64, edge_block=128, chunk_size=256)
+
+
+def _oracle(g, Y, K, laplacian=False):
+    w = g.w
+    if laplacian:
+        deg = g.degrees()
+        sc = 1.0 / np.sqrt(np.maximum(deg, 1.0))
+        w = (w * sc[g.u] * sc[g.v]).astype(np.float32)
+    return gee_numpy(g.u, g.v, w, Y, K, g.n)
+
+
+def _cases():
+    """Weighted/directed/self-loop/partially-labeled graph zoo."""
+    rng = np.random.default_rng(0)
+    cases = {}
+    g = erdos_renyi(130, 700, seed=2, weighted=True)     # weighted digraph
+    cases["weighted_directed"] = (g, make_labels(130, 5, 0.4, rng))
+    loops = Graph(np.arange(40, dtype=np.int32),
+                  np.arange(40, dtype=np.int32),
+                  rng.random(40, dtype=np.float32) + 0.5, 40)
+    mixed = erdos_renyi(40, 160, seed=3, weighted=True)
+    g2 = Graph(np.concatenate([mixed.u, loops.u]),
+               np.concatenate([mixed.v, loops.v]),
+               np.concatenate([mixed.w, loops.w]), 40)   # self-loops
+    cases["self_loops"] = (g2, make_labels(40, 4, 0.5, rng))
+    g3 = erdos_renyi(90, 400, seed=4, weighted=True)
+    Y3 = np.full(90, -1, np.int32)                       # 3 labeled nodes
+    Y3[[0, 7, 31]] = [0, 1, 2]
+    cases["sparsely_labeled"] = (g3, Y3)
+    return cases
+
+
+class TestConformance:
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    @pytest.mark.parametrize("case", sorted(_cases()))
+    def test_all_backends_match_oracle(self, backend, case):
+        g, Y = _cases()[case]
+        K = int(Y.max()) + 1 if Y.max() >= 0 else 3
+        emb = Embedder(EncoderConfig(K=K, **CFG), backend=backend)
+        emb.fit(g, Y)
+        atol = 1e-5 if emb.backend.exact else 1e-4
+        np.testing.assert_allclose(emb.transform(), _oracle(g, Y, K),
+                                   atol=atol)
+        assert emb.last_info_.get("dropped", 0) == 0
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    def test_laplacian_conformance(self, backend):
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5, laplacian=True, **CFG),
+                       backend=backend)
+        emb.fit(g, Y)
+        np.testing.assert_allclose(
+            emb.transform(), _oracle(g, Y, 5, laplacian=True), atol=1e-4)
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    def test_empty_graph(self, backend):
+        g = Graph(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                  np.zeros(0, np.float32), 16)
+        Y = make_labels(16, 3, 0.5, np.random.default_rng(1))
+        emb = Embedder(EncoderConfig(K=3, **CFG), backend=backend)
+        emb.fit(g, Y)
+        assert emb.transform().shape == (16, 3)
+        assert np.all(emb.transform() == 0)
+
+
+class TestPartialFit:
+    def test_delta_then_delete_roundtrip(self):
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5), backend="xla").fit(g, Y)
+        Z0 = emb.transform()
+        rng = np.random.default_rng(9)
+        d = Graph(rng.integers(0, g.n, 60).astype(np.int32),
+                  rng.integers(0, g.n, 60).astype(np.int32),
+                  rng.random(60, dtype=np.float32) + 0.5, g.n)
+        emb.partial_fit(d)
+        # live multiset = g ++ d
+        both = Graph(np.concatenate([g.u, d.u]), np.concatenate([g.v, d.v]),
+                     np.concatenate([g.w, d.w]), g.n)
+        np.testing.assert_allclose(emb.transform(), _oracle(both, Y, 5),
+                                   atol=1e-4)
+        emb.partial_fit(d, sign=-1.0)
+        np.testing.assert_allclose(emb.transform(), Z0, atol=1e-4)
+
+    def test_empty_delta_is_noop(self):
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5), backend="xla").fit(g, Y)
+        Z0 = emb.transform()
+        emb.partial_fit(Graph(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                              np.zeros(0, np.float32), g.n))
+        np.testing.assert_array_equal(emb.transform(), Z0)
+
+    def test_owned_weights_ignore_caller_label_drift(self):
+        """The old `gee_apply_delta(Wv=...)` footgun: deltas must use the
+        weights Z was BUILT with, even if the caller's labels moved."""
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5), backend="xla").fit(g, Y)
+        Y_drifted = Y.copy()
+        Y_drifted[:20] = (Y_drifted[:20] + 1) % 5      # caller-side churn
+        d = Graph(np.array([1, 2], np.int32), np.array([3, 4], np.int32),
+                  np.ones(2, np.float32), g.n)
+        emb.partial_fit(d)                  # uses owned (labels_, Wv_)
+        both = Graph(np.concatenate([g.u, d.u]), np.concatenate([g.v, d.v]),
+                     np.concatenate([g.w, d.w]), g.n)
+        np.testing.assert_allclose(emb.transform(), _oracle(both, Y, 5),
+                                   atol=1e-4)
+
+    def test_laplacian_partial_fit_rejected(self):
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5, laplacian=True),
+                       backend="xla").fit(g, Y)
+        with pytest.raises(ValueError, match="laplacian"):
+            emb.partial_fit(Graph(np.array([0], np.int32),
+                                  np.array([1], np.int32),
+                                  np.ones(1, np.float32), g.n))
+
+    def test_refit_after_partial_fit_rejected(self):
+        """refit re-embeds the plan's ORIGINAL multiset; after deltas
+        that would silently discard them — it must refuse."""
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5), backend="xla").fit(g, Y)
+        emb.partial_fit(Graph(np.array([0], np.int32),
+                              np.array([1], np.int32),
+                              np.ones(1, np.float32), g.n))
+        with pytest.raises(RuntimeError, match="discard"):
+            emb.refit(Y)
+        with pytest.raises(RuntimeError, match="discard"):
+            emb.refine()
+        # a fresh fit on the live graph clears the guard
+        live = Graph(np.concatenate([g.u, [0]]).astype(np.int32),
+                     np.concatenate([g.v, [1]]).astype(np.int32),
+                     np.concatenate([g.w, [1.0]]).astype(np.float32), g.n)
+        emb.fit(live, Y)
+        emb.refit(Y)                       # allowed again
+        np.testing.assert_allclose(emb.transform(), _oracle(live, Y, 5),
+                                   atol=1e-5)
+
+    def test_wrong_n_rejected(self):
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5), backend="xla").fit(g, Y)
+        with pytest.raises(ValueError, match="n="):
+            emb.partial_fit(Graph(np.array([0], np.int32),
+                                  np.array([1], np.int32),
+                                  np.ones(1, np.float32), g.n + 5))
+
+
+class TestPlanCache:
+    @pytest.mark.parametrize("backend",
+                             ["xla", "pallas", "distributed:ring"])
+    def test_same_arrays_hit_cache(self, backend):
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5, **CFG), backend=backend)
+        emb.fit(g, Y)
+        emb.fit(g, Y)
+        emb.refit(Y)
+        assert emb.plan_stats == {"built": 1, "hits": 2}
+
+    def test_new_arrays_rebuild_plan(self):
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5), backend="xla").fit(g, Y)
+        g2 = Graph(g.u.copy(), g.v.copy(), g.w.copy(), g.n)
+        emb.fit(g2, Y)                    # same content, new arrays
+        assert emb.plan_stats["built"] == 2
+
+    def test_plan_swap_invalidates_fitted_state(self):
+        """plan() on a different graph must not leave refit/transform
+        serving the old fit against the new plan."""
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5), backend="xla").fit(g, Y)
+        g2 = Graph(g.u.copy(), g.v.copy(), g.w.copy(), g.n)
+        emb.plan(g2)
+        with pytest.raises(NotFittedError):
+            emb.refit(Y)
+        with pytest.raises(NotFittedError):
+            emb.transform()
+        emb.fit(g2, Y)                     # fitting again recovers
+        np.testing.assert_allclose(emb.transform(), _oracle(g, Y, 5),
+                                   atol=1e-5)
+
+    def test_refit_with_new_labels_skips_packing(self):
+        """The load-bearing property: label churn (refinement rounds,
+        serving epochs) must not re-run host-side packing."""
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5, **CFG), backend="pallas")
+        emb.fit(g, Y)
+        Y2 = make_labels(g.n, 5, 0.7, np.random.default_rng(42))
+        emb.refit(Y2)
+        assert emb.plan_stats == {"built": 1, "hits": 1}
+        np.testing.assert_allclose(emb.transform(), _oracle(g, Y2, 5),
+                                   atol=1e-5)
+
+
+class TestEmbedderContract:
+    def test_not_fitted_errors(self):
+        emb = Embedder(EncoderConfig(K=3))
+        for call in (lambda: emb.transform(), lambda: emb.predict(),
+                     lambda: emb.refit(), lambda: emb.refine()):
+            with pytest.raises(NotFittedError):
+                call()
+
+    def test_unknown_backend(self):
+        with pytest.raises(KeyError, match="registered"):
+            Embedder(EncoderConfig(K=3), backend="tpu-v9")
+
+    def test_label_out_of_range_rejected(self):
+        g, _ = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=3), backend="xla")
+        with pytest.raises(ValueError, match=">= K"):
+            emb.fit(g, np.full(g.n, 4, np.int32))
+
+    def test_predict_and_transform_slices(self):
+        g, truth = sbm(300, 4, 5000, p_in=0.9, seed=5)
+        Y = make_labels(300, 4, 0.2, np.random.default_rng(5),
+                        true_labels=truth)
+        emb = Embedder(EncoderConfig(K=4), backend="xla").fit(g, Y)
+        nodes = np.array([4, 8, 15], np.int32)
+        np.testing.assert_array_equal(emb.transform(nodes),
+                                      emb.transform()[nodes])
+        mask = Y < 0
+        acc = (emb.predict()[mask] == truth[mask]).mean()
+        assert acc > 0.85, acc
+
+    def test_dtype_config(self):
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5, dtype="bfloat16"),
+                       backend="xla").fit(g, Y)
+        assert emb.transform().dtype == jnp.bfloat16
+
+    def test_refine_recovers_sbm(self):
+        g, truth = sbm(200, 3, 4000, p_in=0.95, seed=8)
+        emb = Embedder(EncoderConfig(K=3, refine_iters=8), backend="xla")
+        emb.fit(g, np.full(200, -1, np.int32))
+        emb.refine(jax.random.PRNGKey(1))
+        import itertools
+        best = max((emb.labels_ == np.array(p)[truth]).mean()
+                   for p in itertools.permutations(range(3)))
+        assert best > 0.85, best
+
+    def test_out_of_range_nodes_rejected(self):
+        """jnp gather silently clamps; the front door must raise."""
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5), backend="xla").fit(g, Y)
+        with pytest.raises(IndexError, match="node ids"):
+            emb.transform(np.array([g.n]))
+        with pytest.raises(IndexError, match="node ids"):
+            emb.predict(np.array([-1]))
+
+    def test_refine_twice_rebootstraps(self):
+        """refine() must pin only the FIT-time supervised labels — a
+        second refine with a new key re-bootstraps the unknowns instead
+        of freezing on round one's clustering."""
+        g = erdos_renyi(90, 400, seed=4, weighted=True)  # no communities
+        emb = Embedder(EncoderConfig(K=4, refine_iters=3), backend="xla")
+        emb.fit(g, np.full(90, -1, np.int32))
+        L1 = emb.refine(jax.random.PRNGKey(1)).labels_.copy()
+        L2 = emb.refine(jax.random.PRNGKey(2)).labels_.copy()
+        assert (L1 != L2).any()            # unknowns were re-bootstrapped
+        # supervised pins survive repeated refines
+        Y = np.full(90, -1, np.int32)
+        Y[[0, 5, 9, 14]] = [0, 1, 2, 3]
+        emb2 = Embedder(EncoderConfig(K=4, refine_iters=3), backend="xla")
+        emb2.fit(g, Y).refine(jax.random.PRNGKey(3))
+        emb2.refine(jax.random.PRNGKey(4))
+        np.testing.assert_array_equal(emb2.labels_[Y >= 0], Y[Y >= 0])
+
+    def test_register_custom_backend(self):
+        """New execution strategies plug in without touching call sites."""
+        @register_backend("test:negated")
+        class NegatedXla(get_backend("xla").__class__):
+            pass
+        try:
+            g, Y = _cases()["weighted_directed"]
+            emb = Embedder(EncoderConfig(K=5), backend="test:negated")
+            emb.fit(g, Y)
+            np.testing.assert_allclose(emb.transform(), _oracle(g, Y, 5),
+                                       atol=1e-5)
+        finally:
+            from repro.encoder import backends as B
+            del B._REGISTRY["test:negated"]
+
+
+class TestServiceOnEmbedder:
+    def test_service_runs_on_partial_fit(self):
+        """serving.EmbeddingService delta path == Embedder.partial_fit;
+        its delta-vs-rebuild self-check holds through mixed traffic."""
+        from repro.serving import EmbeddingService, GraphStore
+        rng = np.random.default_rng(3)
+        g, truth = sbm(150, 4, 2000, p_in=0.9, seed=3)
+        Y = make_labels(150, 4, 0.3, rng, true_labels=truth)
+        svc = EmbeddingService(GraphStore(g, Y, 4))
+        assert svc.embedder.backend.name == "streaming"
+        for _ in range(4):
+            b = int(rng.integers(1, 60))
+            svc.apply_edge_delta(rng.integers(0, 150, b).astype(np.int32),
+                                 rng.integers(0, 150, b).astype(np.int32),
+                                 rng.random(b).astype(np.float32))
+        live = svc.store.edges()
+        np.testing.assert_allclose(np.asarray(svc.Z),
+                                   _oracle(live, svc.Y_epoch, 4),
+                                   atol=1e-4)
+        # quiet store -> rebuilds reuse the same base arrays -> plan hits
+        svc.compact()
+        svc.refresh()
+        assert svc.embedder.plan_stats["hits"] >= 1

@@ -106,7 +106,6 @@ class TestProperties:
     @given(seed=st.integers(0, 10_000))
     def test_unlabeled_contribute_nothing(self, seed):
         """Edges from fully-unlabeled sources leave Z untouched."""
-        rng = np.random.default_rng(seed)
         g = erdos_renyi(40, 150, seed=seed % 79)
         Y = np.full(40, -1, np.int32)      # nobody labeled
         Z = _jax_gee(g, Y, 5)

@@ -52,7 +52,8 @@ def dist_results():
     r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, r.stderr[-3000:]
-    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT ")][0]
     return json.loads(line[len("RESULT "):])
 
 

@@ -48,6 +48,44 @@ def test_pad_is_noop_for_gee():
     np.testing.assert_allclose(Z1, Z2, atol=1e-6)
 
 
+def test_pad_preserves_laplacian_degrees():
+    """Regression (ISSUE 2): padded zero-weight self-loops on node 0
+    must not perturb `degrees()` or the Laplacian deg precompute —
+    including when node 0 is isolated (deg 0) and would be most
+    sensitive to a phantom self-loop."""
+    import jax.numpy as jnp
+    from repro.core.gee import gee
+    g = erdos_renyi(60, 123, seed=7, weighted=True)
+    # isolate node 0 so any phantom degree contribution is visible
+    keep = (g.u != 0) & (g.v != 0)
+    g = Graph(g.u[keep], g.v[keep], g.w[keep], g.n)
+    Y = make_labels(60, 4, 0.5, np.random.default_rng(7))
+    gp = g.pad_to(256)
+    assert gp.n == g.n and gp.s == 256
+    np.testing.assert_array_equal(g.degrees(), gp.degrees())
+    assert gp.degrees()[0] == 0.0
+    Z1 = np.asarray(gee(jnp.asarray(g.u), jnp.asarray(g.v),
+                        jnp.asarray(g.w), jnp.asarray(Y), K=4, n=60,
+                        laplacian=True))
+    Z2 = np.asarray(gee(jnp.asarray(gp.u), jnp.asarray(gp.v),
+                        jnp.asarray(gp.w), jnp.asarray(Y), K=4, n=60,
+                        laplacian=True))
+    np.testing.assert_allclose(Z1, Z2, atol=1e-6)
+    # same invariant through the unified API's deg precompute (the
+    # encoder plans degrees from the unpadded graph by construction)
+    from repro.encoder import Embedder, EncoderConfig
+    Zp = Embedder(EncoderConfig(K=4, laplacian=True),
+                  backend="xla").fit(gp, Y).transform()
+    np.testing.assert_allclose(Z1, Zp, atol=1e-6)
+
+
+def test_pad_empty_graph_rejected():
+    g = Graph(np.zeros(0, np.int32), np.zeros(0, np.int32),
+              np.zeros(0, np.float32), 0)
+    with pytest.raises(AssertionError, match="no nodes"):
+        g.pad_to(8)
+
+
 def test_io_roundtrip_and_sharded_reader(tmp_path):
     g = erdos_renyi(100, 999, seed=4, weighted=True)
     path = str(tmp_path / "g.npz")

@@ -44,6 +44,66 @@ class TestGeeScatterKernel:
         assert np.all(np.asarray(Z) == 0)
 
 
+class TestPackEdges:
+    """Host-side packing edge cases (ISSUE 2): the packed blocks must
+    round-trip to exactly the XLA scatter result."""
+
+    @staticmethod
+    def _scatter_oracle(dst, cls, val, n, K):
+        Z = np.zeros((n, K), np.float32)
+        np.add.at(Z, (np.asarray(dst), np.asarray(cls)), np.asarray(val))
+        return Z
+
+    @staticmethod
+    def _unpack_scatter(rows, clsb, valb, T, tile_n, n, K):
+        """Replay the packed blocks on the host: tile-local rows become
+        global rows; padded slots carry val = 0 and cancel out."""
+        Z = np.zeros((T * tile_n, K), np.float32)
+        for t in range(T):
+            r = rows[t].reshape(-1) + t * tile_n
+            c = clsb[t].reshape(-1)
+            x = valb[t].reshape(-1)
+            np.add.at(Z, (r, c), x)
+        return Z[:n]
+
+    def _roundtrip(self, dst, cls, val, n, K, tile_n=64, edge_block=32):
+        rows, clsb, valb, T = ops.pack_edges(dst, cls, val, n,
+                                             tile_n, edge_block)
+        assert rows.shape == clsb.shape == valb.shape
+        assert rows.shape[0] == T and rows.shape[2] == edge_block
+        got = self._unpack_scatter(rows, clsb, valb, T, tile_n, n, K)
+        np.testing.assert_allclose(
+            got, self._scatter_oracle(dst, cls, val, n, K), atol=1e-6)
+
+    def test_empty_edge_list(self):
+        dst = np.zeros(0, np.int32)
+        self._roundtrip(dst, dst.copy(), np.zeros(0, np.float32),
+                        n=100, K=4)
+
+    def test_all_edges_one_destination_tile(self):
+        rng = np.random.default_rng(11)
+        dst = rng.integers(0, 64, 500).astype(np.int32)   # tile 0 only
+        cls = rng.integers(0, 4, 500).astype(np.int32)
+        val = rng.random(500, dtype=np.float32)
+        self._roundtrip(dst, cls, val, n=1000, K=4)
+
+    def test_n_not_multiple_of_tile(self):
+        rng = np.random.default_rng(13)
+        n = 257                                           # 257 % 64 != 0
+        dst = rng.integers(0, n, 900).astype(np.int32)
+        cls = rng.integers(0, 5, 900).astype(np.int32)
+        val = rng.random(900, dtype=np.float32)
+        self._roundtrip(dst, cls, val, n=n, K=5)
+
+    def test_empty_graph_through_pallas_kernel(self):
+        """pack_edges empty case end-to-end through gee_pallas."""
+        Z = ops.gee_pallas(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                           np.zeros(0, np.float32),
+                           jnp.zeros(64, jnp.int32), K=4, n=64,
+                           tile_n=64, edge_block=64)
+        assert np.all(np.asarray(Z) == 0) and Z.shape == (64, 4)
+
+
 class TestFlashAttentionKernel:
     @pytest.mark.parametrize("B,H,KV,S,D", [
         (1, 2, 2, 64, 16),      # MHA

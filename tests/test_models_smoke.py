@@ -64,8 +64,8 @@ def test_full_config_param_specs_consistent(arch):
     n = M.count_params_analytic(cfg)
     assert n > 1e8      # every assigned arch is >= 0.8B params
     leaves = jax.tree_util.tree_leaves(specs)
-    assert all(hasattr(l, "shape") for l in leaves)
-    total = sum(int(np.prod(l.shape)) for l in leaves)
+    assert all(hasattr(leaf, "shape") for leaf in leaves)
+    total = sum(int(np.prod(leaf.shape)) for leaf in leaves)
     assert total == n
 
 

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.gee import gee, gee_apply_delta, gee_streaming, make_w
-from repro.graph.edges import Graph, make_labels
+from repro.graph.edges import make_labels
 from repro.graph.generators import erdos_renyi, sbm
 from repro.serving.batcher import MicroBatcher
 from repro.serving.queries import (class_centroids, gather_embeddings,
@@ -230,7 +230,6 @@ class TestBatcher:
                 t.result(), Z[np.asarray(t.payload)], atol=1e-6)
 
     def test_mixed_read_kinds_one_batch_each(self):
-        rng = np.random.default_rng(37)
         g, truth = sbm(200, 4, 3000, p_in=0.9, seed=37)
         Y = make_labels(200, 4, 0.3, np.random.default_rng(37),
                         true_labels=truth)

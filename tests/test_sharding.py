@@ -1,13 +1,12 @@
 """Sharding rule unit tests (no multi-device needed: PartitionSpecs are
 pure functions of mesh shape + logical axes)."""
-import jax
 import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, list_archs
 from repro.models import model as M
-from repro.models.layers import is_spec, tree_map_specs
+from repro.models.layers import tree_map_specs
 from repro.sharding import make_rules
 
 

@@ -1,6 +1,5 @@
 """End-to-end behaviour tests for the paper's system."""
 import numpy as np
-import pytest
 
 
 def test_training_loss_decreases():

@@ -10,7 +10,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticTokens
 from repro.training import compression
-from repro.training.optimizer import AdamW, cosine_schedule, global_norm
+from repro.training.optimizer import AdamW, cosine_schedule
 
 
 class TestAdamW:
