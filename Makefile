@@ -2,7 +2,8 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint install install-dev serve-demo bench-serving bench-encoder
+.PHONY: test lint install install-dev serve-demo bench-serving \
+	bench-encoder bench-smoke
 
 # Tier-1 verify: the whole suite, fail-fast.
 test:
@@ -33,3 +34,9 @@ bench-serving:
 # Unified Embedder API: per-backend edges/s + plan-cache effect.
 bench-encoder:
 	$(PY) -m benchmarks.run --only encoder
+
+# CI rot canary: every benchmark driver end-to-end on tiny graphs.
+# (fig3 spawns a device-sweep subprocess matrix and roofline needs
+# dry-run artifacts; both have their own entry points.)
+bench-smoke:
+	$(PY) -m benchmarks.run --quick --only table1,fig4,kernels,encoder,serving

@@ -1,10 +1,20 @@
-"""Shared benchmark utilities: timing, CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, quick mode."""
 from __future__ import annotations
 
 import time
 from typing import Callable
 
 import jax
+
+#: set by `benchmarks.run --quick` (the `make bench-smoke` CI path):
+#: suites shrink to tiny graphs so every driver is exercised end-to-end
+#: in seconds — a rot canary, not a measurement.
+QUICK = False
+
+
+def pick(full, quick):
+    """Suite-size helper: `full` normally, `quick` under --quick."""
+    return quick if QUICK else full
 
 
 def time_it(fn: Callable, *args, warmup: int = 1, iters: int = 3,

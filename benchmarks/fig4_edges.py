@@ -6,25 +6,29 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, time_it
 from repro.core import gee as G
 from repro.graph.edges import make_labels
 from repro.graph.generators import erdos_renyi
 
 SIZES = [250_000, 500_000, 1_000_000, 2_000_000, 4_000_000]
+QUICK_SIZES = [2_000, 4_000, 8_000]
 K = 50
 N = 200_000
 
 
 def run() -> None:
     rng = np.random.default_rng(0)
-    Y = make_labels(N, K, 0.10, rng)
+    n = common.pick(N, 1_000)
+    k = common.pick(K, 8)
+    Y = make_labels(n, k, 0.10, rng)
     Yj = jnp.asarray(Y)
     xs, ts = [], []
-    for s in SIZES:
-        g = erdos_renyi(N, s, seed=s, weighted=True)
+    for s in common.pick(SIZES, QUICK_SIZES):
+        g = erdos_renyi(n, s, seed=s, weighted=True)
         uj, vj, wj = map(jnp.asarray, (g.u, g.v, g.w))
-        t = time_it(lambda: G.gee(uj, vj, wj, Yj, K=K, n=N),
+        t = time_it(lambda: G.gee(uj, vj, wj, Yj, K=k, n=n),
                     warmup=1, iters=3)
         xs.append(s)
         ts.append(t)

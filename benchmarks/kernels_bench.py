@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import jax
 
+from benchmarks import common
 from benchmarks.common import emit, time_it
 from repro.encoder import Embedder, EncoderConfig
 from repro.graph.edges import make_labels
@@ -17,11 +18,12 @@ import numpy as np
 
 def run() -> None:
     rng = np.random.default_rng(0)
+    n, k = common.pick((100_000, 50), (1_000, 8))
     # jnp scatter hot path at a few scales
-    for s in (1_000_000, 4_000_000):
-        g = erdos_renyi(100_000, s, seed=s)
-        Y = make_labels(g.n, 50, 0.1, rng)
-        emb = Embedder(EncoderConfig(K=50), backend="xla").fit(g, Y)
+    for s in common.pick((1_000_000, 4_000_000), (4_000, 8_000)):
+        g = erdos_renyi(n, s, seed=s)
+        Y = make_labels(g.n, k, 0.1, rng)
+        emb = Embedder(EncoderConfig(K=k), backend="xla").fit(g, Y)
         t = time_it(lambda: emb.refit(Y).Z_, warmup=1, iters=3)
         emit(f"kernels/gee_xla_scatter/s{s}", t,
              f"edges_per_s={s / t:,.0f}")

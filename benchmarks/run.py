@@ -27,7 +27,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny graphs, minimal iters: exercises every "
+                         "chosen driver end-to-end in seconds (the "
+                         "`make bench-smoke` CI gate), numbers are NOT "
+                         "meaningful measurements")
     args = ap.parse_args()
+    if args.quick:
+        from benchmarks import common
+        common.QUICK = True
     chosen = args.only.split(",") if args.only else list(SUITES)
 
     print("name,us_per_call,derived")

@@ -11,6 +11,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, time_it
 from repro.core.gee import gee, gee_apply_delta, make_w
 from repro.graph.edges import Graph, make_labels
@@ -24,6 +25,9 @@ DELTA_FRAC = 0.01
 
 
 def run() -> None:
+    global N, S
+    N = common.pick(N, 2_000)
+    S = common.pick(S, 30_000)
     rng = np.random.default_rng(0)
     g = erdos_renyi(N, S, seed=0, weighted=True)
     Y = make_labels(N, K, 0.1, rng)

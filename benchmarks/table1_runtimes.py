@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import emit, time_it
 from repro.core import ref_python as R
 from repro.encoder import Embedder, EncoderConfig
@@ -31,20 +32,22 @@ GRAPHS = [
     ("livejournal-s", 64_000, 690_000),
     ("orkut-s", 30_000, 1_170_000),
 ]
+QUICK_GRAPHS = [("tiny", 400, 4_000)]
 K = 50
 
 
 def run() -> None:
     rng = np.random.default_rng(0)
-    cfg = EncoderConfig(K=K)
-    for name, n, s in GRAPHS:
+    K_ = common.pick(K, 8)
+    cfg = EncoderConfig(K=K_)
+    for name, n, s in common.pick(GRAPHS, QUICK_GRAPHS):
         g = erdos_renyi(n, s, seed=1, weighted=True)
-        Y = make_labels(n, K, 0.10, rng)
+        Y = make_labels(n, K_, 0.10, rng)
 
         # interpreted python loop — only on the smallest graph (paper's
         # GEE-Python column took 56 min on Friendster; same reason)
         if s <= 100_000:
-            t_py = time_it(lambda: R.gee_python(g.u, g.v, g.w, Y, K, n),
+            t_py = time_it(lambda: R.gee_python(g.u, g.v, g.w, Y, K_, n),
                            warmup=0, iters=1)
             emit(f"table1/{name}/python_loop", t_py, f"s={s}")
         else:
@@ -53,7 +56,7 @@ def run() -> None:
         # the numpy column measures the compiled serial scatter ITSELF
         # (the paper's Numba analog), not Embedder round-trip overhead —
         # time the backend internal directly
-        t_np = time_it(lambda: R.gee_numpy(g.u, g.v, g.w, Y, K, n),
+        t_np = time_it(lambda: R.gee_numpy(g.u, g.v, g.w, Y, K_, n),
                        warmup=1, iters=3)
         emit(f"table1/{name}/numpy_compiled", t_np, f"s={s}")
 

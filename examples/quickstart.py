@@ -5,7 +5,11 @@
 
 One config + one Embedder front door; the execution strategy (XLA
 scatter, Pallas kernel, SPMD collectives, streaming chunks, numpy
-oracle) is just the `backend=` string.
+oracle) is just the `backend=` string — or `"auto"` (the default),
+resolved from the graph size and device topology.  Graphs enter
+through a `GraphSource` (here: a deterministic synthetic source whose
+content fingerprint keys the persistent plan cache — rerun this script
+and the second process's plan comes off disk).
 """
 import itertools
 import time
@@ -15,20 +19,24 @@ import numpy as np
 
 from repro.encoder import Embedder, EncoderConfig
 from repro.graph.edges import make_labels
-from repro.graph.generators import sbm
+from repro.graph.sources import SyntheticSource
 
 
 def main():
     # --- 1. a community graph with 5 planted blocks --------------------
     n, K, s = 20_000, 5, 400_000
-    g, truth = sbm(n, K, s, p_in=0.9, seed=0)
+    src = SyntheticSource("sbm", n=n, K=K, s=s, p_in=0.9, seed=0)
+    g, truth = src.graph(), src.labels
     Y = make_labels(n, K, 0.10, np.random.default_rng(0),
                     true_labels=truth)
-    print(f"graph: n={n:,} s={s:,} K={K}, 10% labeled")
+    print(f"graph: n={n:,} s={s:,} K={K}, 10% labeled "
+          f"(fingerprint {src.fingerprint()[:12]}…)")
 
     # --- 2. one-pass semi-supervised embedding -------------------------
-    cfg = EncoderConfig(K=K)
-    emb = Embedder(cfg, backend="xla").fit(g, Y)      # plan + embed
+    cfg = EncoderConfig(K=K)                     # backend="auto"
+    emb = Embedder(cfg).fit(src, Y)              # plan + embed
+    print(f"backend=auto resolved to {emb.backend.name!r}; "
+          f"plan {emb.plan_stats}")
     t0 = time.perf_counter()
     emb.refit(Y)                   # cached plan: no host re-packing
     jax.block_until_ready(emb.Z_)

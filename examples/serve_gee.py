@@ -33,7 +33,12 @@ store = GraphStore(g, Y, K)
 service = EmbeddingService(store, rebuild_churn=0.05)
 batcher = MicroBatcher(service, topk=5)
 print(f"boot: n={n} edges={s:,} -> epoch={service.epoch} "
-      f"version={service.version}")
+      f"version={service.version} "
+      f"fingerprint={store.fingerprint()[:12]}… "
+      f"plan={service.embedder.plan_stats}")
+# (the store maintains that fingerprint incrementally per delta; a
+# second replica booting from the same snapshot+deltas finds this
+# boot's plan in the persistent cache and skips host preprocessing)
 
 # -- 2. live edge churn ---------------------------------------------------
 b = 500

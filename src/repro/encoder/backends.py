@@ -19,12 +19,26 @@ in where the scatter runs and how contributions move:
 
 Register new strategies with ``@register_backend("name")``; callers
 select them by name through ``Embedder(..., backend="name")`` without
-touching any call site.
+touching any call site.  ``backend="auto"`` (the `EncoderConfig`
+default) picks a strategy at plan time from (n, s, device kind, device
+count) via the overridable `AUTO_POLICY` table below.
+
+Every backend's plan is built in two halves:
+
+  plan_host      expensive, label-free, DEVICE-FREE artifacts (numpy
+                 arrays / scalars) — persistable by the cross-process
+                 plan cache (`repro.encoder.plan_cache`);
+  plan_finalize  cheap per-process work: device uploads, mesh
+                 placement, chunk views — always re-run.
+
+A cache hit hands plan() the stored host dict and skips plan_host
+entirely; that is the whole point of the persistent tier.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple, Type
+from typing import Callable, Dict, List, Optional, Tuple, Type
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -63,15 +77,50 @@ class Backend:
     #: scatter-path backends reproduce the oracle to float tolerance;
     #: bucketed collective modes additionally depend on capacity padding.
     exact: bool = True
+    #: bump when the plan_host artifact layout changes — stale disk
+    #: entries from older code then read as misses, not wrong plans
+    plan_version: int = 1
+    #: whether plan_host output may be persisted cross-process
+    persistable: bool = True
 
-    def _base(self, graph: Graph, config: EncoderConfig) -> Plan:
-        return Plan(backend=self.name, config=config, n=graph.n, s=graph.s,
-                    w_eff=effective_weights(graph, config),
-                    **Plan.anchors(graph))
+    def cache_context(self, *, mesh=None) -> str:
+        """Runtime context baked into the persistent-cache key (e.g.
+        device count, which distributed capacity factors depend on)."""
+        return ""
 
-    def plan(self, graph: Graph, config: EncoderConfig, *,
-             mesh=None) -> Plan:
+    def plan_host(self, graph: Graph, config: EncoderConfig,
+                  w_eff: np.ndarray, *, mesh=None) -> Dict:
+        """Backend-specific expensive host artifacts (numpy arrays /
+        scalars only; "w_eff" is added by `plan`)."""
+        return {}
+
+    def plan_finalize(self, plan: Plan, graph: Graph, *,
+                      mesh=None) -> None:
+        """Populate plan.data from (graph, plan.host): device uploads,
+        mesh placement, chunk views — cheap, re-run every process."""
         raise NotImplementedError
+
+    def plan(self, graph: Graph, config: EncoderConfig, *, mesh=None,
+             host: Optional[Dict] = None) -> Plan:
+        """Build the plan; `host` (from the persistent cache) skips the
+        expensive half.
+
+        w_eff only rides the host dict (and hence disk) when Laplacian
+        scaling makes it a real O(s) artifact; unscaled it IS graph.w,
+        so persisting it would bloat every cache entry with a full
+        per-edge copy that costs more to load than to recompute."""
+        if host is None:
+            w_eff = effective_weights(graph, config)
+            host = {**({"w_eff": w_eff} if config.laplacian else {}),
+                    **self.plan_host(graph, config, w_eff, mesh=mesh)}
+        else:
+            w_eff = (host["w_eff"] if "w_eff" in host
+                     else effective_weights(graph, config))
+        p = Plan(backend=self.name, config=config, n=graph.n, s=graph.s,
+                 w_eff=np.asarray(w_eff, np.float32), host=host,
+                 **Plan.anchors(graph))
+        self.plan_finalize(p, graph, mesh=mesh)
+        return p
 
     def embed(self, plan: Plan, Yj: jnp.ndarray, Wv: jnp.ndarray
               ) -> Tuple[jnp.ndarray, dict]:
@@ -84,10 +133,8 @@ class NumpyBackend(Backend):
     """`ref_python.gee_numpy`: the host-side oracle every other backend
     is conformance-checked against."""
 
-    def plan(self, graph, config, *, mesh=None):
-        p = self._base(graph, config)
+    def plan_finalize(self, p, graph, *, mesh=None):
         p.data = {"u": np.asarray(graph.u), "v": np.asarray(graph.v)}
-        return p
 
     def embed(self, plan, Yj, Wv):
         from repro.core.ref_python import gee_numpy
@@ -103,11 +150,9 @@ class XlaBackend(Backend):
     path.  Passes the Embedder-owned Wv through `gee`'s precompute
     parameter instead of re-deriving it from Y."""
 
-    def plan(self, graph, config, *, mesh=None):
-        p = self._base(graph, config)
+    def plan_finalize(self, p, graph, *, mesh=None):
         p.data = {"u": jnp.asarray(graph.u), "v": jnp.asarray(graph.v),
                   "w": jnp.asarray(p.w_eff)}
-        return p
 
     def embed(self, plan, Yj, Wv):
         from repro.core.gee import gee
@@ -124,22 +169,28 @@ class PallasBackend(Backend):
     The plan packs (tile-local row, source node, weight) — all
     label-free — so refits resolve classes/values on device from the
     current (Y, Wv) and skip the O(s log s) host sort entirely.  Padded
-    slots carry w = 0 and are no-ops for any labeling.
+    slots carry w = 0 and are no-ops for any labeling.  The packed
+    buffers are the host half: a persistent-cache hit skips the sort in
+    a fresh process too.
     """
 
-    def plan(self, graph, config, *, mesh=None):
+    def plan_host(self, graph, config, w_eff, *, mesh=None):
         from repro.kernels.ops import _round_up, pack_edges
-        p = self._base(graph, config)
         u, v = np.asarray(graph.u), np.asarray(graph.v)
         dst = np.concatenate([u, v])
         src = np.concatenate([v, u])          # label donor
-        w2 = np.concatenate([p.w_eff, p.w_eff])
+        w2 = np.concatenate([w_eff, w_eff])
         rows, srcb, wb, T = pack_edges(dst, src, w2, graph.n,
                                        config.tile_n, config.edge_block)
-        p.data = {"rows": jnp.asarray(rows), "src": jnp.asarray(srcb),
-                  "w": jnp.asarray(wb), "T": T,
-                  "kdim": _round_up(config.K, 8)}
-        return p
+        return {"rows": rows, "src": srcb, "w_packed": wb, "T": T,
+                "kdim": _round_up(config.K, 8)}
+
+    def plan_finalize(self, p, graph, *, mesh=None):
+        h = p.host
+        p.data = {"rows": jnp.asarray(h["rows"]),
+                  "src": jnp.asarray(h["src"]),
+                  "w": jnp.asarray(np.asarray(h["w_packed"], np.float32)),
+                  "T": int(h["T"]), "kdim": int(h["kdim"])}
 
     def embed(self, plan, Yj, Wv):
         from repro.kernels.gee_scatter import gee_scatter_pallas
@@ -160,15 +211,14 @@ class StreamingBackend(Backend):
     uploaded, folded into Z, and released, so only O(chunk) edge data
     plus Z ever lives on device (the serving-rebuild and out-of-core
     ingestion path).  Chunks stay host-side in the plan (non-tail
-    chunks are views of the caller's arrays, not copies)."""
+    chunks are views of the caller's arrays, not copies; chunking is
+    cheap, so only w_eff rides the persistent cache)."""
 
-    def plan(self, graph, config, *, mesh=None):
+    def plan_finalize(self, p, graph, *, mesh=None):
         from repro.graph.edges import chunk_edges
-        p = self._base(graph, config)
         p.data = {"chunks": list(chunk_edges(
             np.asarray(graph.u, np.int32), np.asarray(graph.v, np.int32),
-            p.w_eff, config.chunk_size))}
-        return p
+            p.w_eff, p.config.chunk_size))}
 
     def embed(self, plan, Yj, Wv):
         from repro.core.gee import gee_streaming
@@ -186,31 +236,43 @@ class DistributedBackend(Backend):
     The plan pads edges and rows to the mesh, places the padded arrays,
     and — for bucketed modes — measures the exact zero-drop capacity
     factor from the owner histogram (an O(s) host pass now done once
-    instead of per fit).
+    instead of per fit).  The capacity factor depends on the device
+    count, so it is the persisted host artifact and the device count is
+    baked into the cache key (`cache_context`); padding and placement
+    are per-process finalize work.
     """
 
     mode = "ring"
     exact = False          # bucketed modes depend on capacity padding
 
-    def plan(self, graph, config, *, mesh=None):
-        from repro.core.distributed import (edge_mesh,
-                                            exact_capacity_factor,
-                                            pad_rows)
-        p = self._base(graph, config)
-        mesh = mesh if mesh is not None else edge_mesh()
-        nd = mesh.devices.size
+    @staticmethod
+    def _mesh(mesh):
+        from repro.core.distributed import edge_mesh
+        return mesh if mesh is not None else edge_mesh()
+
+    def cache_context(self, *, mesh=None) -> str:
+        return f"nd={self._mesh(mesh).devices.size}"
+
+    def plan_host(self, graph, config, w_eff, *, mesh=None):
+        from repro.core.distributed import exact_capacity_factor
+        nd = self._mesh(mesh).devices.size
         cf = config.capacity_factor
         if cf is None and self.mode in ("a2a", "ring"):
             cf = exact_capacity_factor(graph, nd)
+        return {"capacity_factor": cf if cf is not None else 2.0}
+
+    def plan_finalize(self, p, graph, *, mesh=None):
+        from repro.core.distributed import pad_rows
+        mesh = self._mesh(mesh)
+        nd = mesh.devices.size
         n_pad = pad_rows(graph.n, nd)
         s_pad = pad_rows(graph.s, nd)
         g = Graph(np.asarray(graph.u), np.asarray(graph.v), p.w_eff,
                   graph.n).pad_to(s_pad)
         p.data = {"mesh": mesh, "n_pad": n_pad,
-                  "capacity_factor": cf if cf is not None else 2.0,
+                  "capacity_factor": float(p.host["capacity_factor"]),
                   "u": jnp.asarray(g.u), "v": jnp.asarray(g.v),
                   "w": jnp.asarray(g.w)}
-        return p
 
     def embed(self, plan, Yj, Wv):
         from repro.core.distributed import gee_sharded
@@ -232,3 +294,56 @@ for _mode in ("replicated", "reduce_scatter", "a2a", "ring"):
              (DistributedBackend,),
              {"mode": _mode,
               "exact": _mode in ("replicated", "reduce_scatter")}))
+
+
+# -- backend="auto": the plan-time selection policy -------------------------
+
+#: edge count past which a single device should stop holding the whole
+#: edge list and stream chunks instead (tunable; ~3 int/float arrays of
+#: this length is the resident cost the threshold bounds)
+AUTO_STREAMING_EDGES = 32_000_000
+
+
+def _rule_multi_device(n, s, device_kind, device_count):
+    return "distributed:reduce_scatter" if device_count > 1 else None
+
+
+def _rule_out_of_core(n, s, device_kind, device_count):
+    return "streaming" if s >= AUTO_STREAMING_EDGES else None
+
+
+def _rule_tpu_kernel(n, s, device_kind, device_count):
+    return "pallas" if device_kind == "tpu" else None
+
+
+#: ordered (name, rule(n, s, device_kind, device_count) -> backend name
+#: or None) pairs; the first rule returning a name wins, fallback is
+#: "xla".  Overridable: mutate this list (insert/replace rules) to
+#: change policy globally — it is data, not code.
+AUTO_POLICY: List[Tuple[str, Callable]] = [
+    ("multi_device", _rule_multi_device),
+    ("out_of_core", _rule_out_of_core),
+    ("tpu_kernel", _rule_tpu_kernel),
+]
+
+
+def resolve_auto(n: int, s: int, *, device_kind: Optional[str] = None,
+                 device_count: Optional[int] = None, mesh=None) -> str:
+    """Resolve `backend="auto"` for a graph of (n, s) on this runtime.
+
+    Device kind/count default to the provided mesh, else
+    `jax.devices()`.  Walks `AUTO_POLICY` in order; first hit wins,
+    fallback "xla".  Pure given explicit kind/count (unit-testable
+    without hardware)."""
+    if device_kind is None or device_count is None:
+        devs = (list(mesh.devices.flat) if mesh is not None
+                else jax.devices())
+        if device_kind is None:
+            device_kind = devs[0].platform
+        if device_count is None:
+            device_count = len(devs)
+    for _, rule in AUTO_POLICY:
+        name = rule(n, s, device_kind, device_count)
+        if name is not None:
+            return name
+    return "xla"

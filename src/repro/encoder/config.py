@@ -31,6 +31,11 @@ class EncoderConfig:
       kmeans_iters   k-means steps per round.
 
     Backend tuning (never change Z, only speed/memory):
+      backend     execution strategy by registry name, or "auto"
+                  (default) — resolved at plan time from (n, s, device
+                  kind, device count) via the overridable policy table
+                  in `repro.encoder.backends.AUTO_POLICY`.  An explicit
+                  `Embedder(..., backend=...)` argument overrides this.
       tile_n, edge_block, interpret   Pallas kernel geometry.
       chunk_size                      streaming chunk length.
       capacity_factor                 distributed bucket padding; None
@@ -42,6 +47,7 @@ class EncoderConfig:
     K: int
     laplacian: bool = False
     dtype: str = "float32"
+    backend: str = "auto"
     # refinement
     refine_iters: int = 10
     kmeans_iters: int = 3

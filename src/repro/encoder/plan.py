@@ -17,6 +17,14 @@ therefore carries only label-free artifacts and is reused across
 `fit`/`refit` calls on the same graph (matched by array identity —
 O(1), no content hashing; a new edge multiset means new arrays means a
 new plan).
+
+The plan itself splits once more, into a **host** half and a **device**
+half (`Backend.plan_host` / `Backend.plan_finalize`): the host half is
+the expensive, device-free preprocessing (w_eff, Pallas destination
+packing, distributed capacity factors) and is what the persistent
+cross-process plan cache (`repro.encoder.plan_cache`) persists, keyed
+on the graph's content fingerprint; the device half (uploads, mesh
+placement, chunk views) is rebuilt cheaply in every process.
 """
 from __future__ import annotations
 
@@ -56,6 +64,10 @@ class Plan:
     s: int
     w_eff: np.ndarray                   # laplacian-scaled edge weights
     data: Dict[str, Any] = field(default_factory=dict)
+    #: the persistable host half (np arrays / scalars only) — what the
+    #: cross-process plan cache stores; carries "w_eff" only when
+    #: Laplacian scaling makes it a real artifact (else it is graph.w)
+    host: Dict[str, Any] = field(default_factory=dict)
     # identity anchors for O(1) cache matching
     _u: Optional[np.ndarray] = None
     _v: Optional[np.ndarray] = None

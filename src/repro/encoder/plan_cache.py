@@ -1,0 +1,155 @@
+"""Persistent cross-process plan cache: tier 2 of `Embedder.plan`.
+
+Tier 1 (in `Embedder`) matches plans by array identity — O(1), but it
+dies with the process.  GEE's practical workload re-embeds the *same
+graph* many times as labels churn, across restarts, CI reruns, and
+serving replicas; for those, graph identity is content, not arrays.
+This module stores each plan's **host half** (w_eff, Pallas destination
+packing, distributed capacity factors — everything expensive and
+device-free) on disk, keyed on:
+
+    (graph fingerprint, backend name, backend plan_version,
+     config fields, backend cache context e.g. device count)
+
+so a fresh process skips host packing entirely and goes straight to
+`Backend.plan_finalize` (cheap device placement).
+
+Location: ``$REPRO_PLAN_CACHE`` if set (the values ``0 / off / none /
+disable(d)`` or empty disable the tier), else
+``$XDG_CACHE_HOME/repro-gee/plans`` (``~/.cache/repro-gee/plans``).
+
+Robustness contract (tested):
+  * writes are atomic (tmp file + os.replace) — a crashed writer can
+    never leave a partial entry visible;
+  * entries are versioned (format + per-backend plan_version) and
+    self-describing — a stale entry is treated as a miss and rebuilt;
+  * a corrupt entry (truncated, garbage) is deleted and rebuilt — the
+    cache can only ever cost a rebuild, never a wrong answer;
+  * a hit is verified against the request's full metadata, so a key
+    collision degrades to a miss.
+
+``PlanDiskCache.clear()`` wipes the directory (also: just delete it).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import asdict
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+FORMAT_VERSION = 1
+_META_KEY = "__meta__"
+_OFF_VALUES = ("", "0", "off", "none", "disable", "disabled")
+
+
+def config_token(config) -> str:
+    """Canonical string of the config fields a plan depends on.  The
+    `backend` field is excluded: the resolved backend NAME is its own
+    key component (so `backend="auto"` and an explicit name that auto
+    resolves to share entries)."""
+    d = {k: v for k, v in asdict(config).items() if k != "backend"}
+    return json.dumps(d, sort_keys=True)
+
+
+class PlanDiskCache:
+    """Content-addressed npz store for plan host halves."""
+
+    def __init__(self, root):
+        self.root = Path(root)
+
+    # -- keying -----------------------------------------------------------
+
+    def describe(self, fingerprint: str, backend, config, *,
+                 mesh=None) -> Dict[str, Any]:
+        """The full metadata a cached entry must match to be served."""
+        return {"format": FORMAT_VERSION,
+                "fingerprint": fingerprint,
+                "backend": backend.name,
+                "plan_version": backend.plan_version,
+                "config": config_token(config),
+                "context": backend.cache_context(mesh=mesh)}
+
+    @staticmethod
+    def key(meta: Dict[str, Any]) -> str:
+        blob = json.dumps(meta, sort_keys=True).encode()
+        return hashlib.blake2b(blob, digest_size=16).hexdigest()
+
+    def path(self, meta: Dict[str, Any]) -> Path:
+        return self.root / (self.key(meta) + ".npz")
+
+    # -- load / store -----------------------------------------------------
+
+    def load(self, meta: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+        """The stored host dict, or None (miss / stale / corrupt).
+
+        Corrupt entries are deleted so the subsequent rebuild's store
+        replaces them; stale ones (old format, different config hash
+        behind a colliding key) are simply ignored."""
+        path = self.path(meta)
+        if not path.exists():
+            return None
+        try:
+            with np.load(path, allow_pickle=False) as d:
+                stored = json.loads(str(d[_META_KEY][()]))
+                if stored != meta:
+                    return None                       # stale / collision
+                return {k: d[k] for k in d.files if k != _META_KEY}
+        except Exception:
+            try:
+                path.unlink()
+            except OSError:
+                pass
+            return None
+
+    def store(self, meta: Dict[str, Any], host: Dict[str, Any]) -> bool:
+        """Atomically persist `host` under `meta`'s key.  Best-effort:
+        an unwritable cache dir must never break embedding."""
+        path = self.path(meta)
+        tmp = path.with_name(f"{path.stem}.tmp{os.getpid()}.npz")
+        try:
+            self.root.mkdir(parents=True, exist_ok=True)
+            with open(tmp, "wb") as f:
+                np.savez(f, **{_META_KEY: np.asarray(json.dumps(meta))},
+                         **host)
+            os.replace(tmp, path)
+            return True
+        except Exception:
+            try:
+                tmp.unlink()
+            except OSError:
+                pass
+            return False
+
+    # -- maintenance ------------------------------------------------------
+
+    def entries(self) -> list[Path]:
+        if not self.root.is_dir():
+            return []
+        return sorted(p for p in self.root.glob("*.npz"))
+
+    def clear(self) -> int:
+        """Delete every entry; returns how many were removed."""
+        removed = 0
+        for p in self.entries():
+            try:
+                p.unlink()
+                removed += 1
+            except OSError:
+                pass
+        return removed
+
+
+def default_cache() -> Optional[PlanDiskCache]:
+    """Resolve the process-wide default cache from the environment
+    (None = persistent tier disabled)."""
+    env = os.environ.get("REPRO_PLAN_CACHE")
+    if env is not None:
+        if env.strip().lower() in _OFF_VALUES:
+            return None
+        return PlanDiskCache(env)
+    base = os.environ.get("XDG_CACHE_HOME") or (Path.home() / ".cache")
+    return PlanDiskCache(Path(base) / "repro-gee" / "plans")

@@ -1,1 +1,7 @@
-"""Graph substrate: edge lists, generators, partitioning, IO."""
+"""Graph substrate: edge lists, generators, partitioning, IO, sources.
+
+`repro.graph.sources` is the unified entry surface: every ingestion
+path (synthetic, snapshot, sharded stream, serving store) is a
+`GraphSource` yielding a `Graph` plus a content fingerprint — the
+identity the encoder's persistent plan cache is keyed on.
+"""

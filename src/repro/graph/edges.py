@@ -8,10 +8,81 @@ Y in {0..K}^n with 0 = unknown (paper) are remapped here to
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
+
+try:                                   # fast path where available
+    import xxhash
+
+    def _new_hash():
+        return xxhash.xxh3_128()
+except ImportError:                    # stdlib fallback, same interface
+    def _new_hash():
+        return hashlib.blake2b(digest_size=16)
+
+
+def _hash_edges(h, u, v, w) -> None:
+    """Feed (u, v, w) into hasher `h` in canonical dtypes, so two graphs
+    with equal content but different array dtypes/layout agree."""
+    for arr, dt in ((u, np.int32), (v, np.int32), (w, np.float32)):
+        h.update(np.ascontiguousarray(arr, dt).data)
+
+
+class FingerprintAccumulator:
+    """Streaming edge-fingerprint builder: feed (u, v, w) batches in
+    order, read `digest()` at the end.
+
+    One hasher per column, combined at digest time — so the value
+    depends only on the CONTENT streamed, never on how it was chunked
+    (a reader with chunk_size=128 and one with 512 agree, and both
+    agree with a whole-array `edge_fingerprint`)."""
+
+    def __init__(self, n: int):
+        self._n = int(n)
+        self._cols = (_new_hash(), _new_hash(), _new_hash())
+
+    def update(self, u, v, w) -> "FingerprintAccumulator":
+        for h, arr, dt in zip(self._cols,
+                              (u, v, w),
+                              (np.int32, np.int32, np.float32)):
+            h.update(np.ascontiguousarray(arr, dt).data)
+        return self
+
+    def digest(self) -> str:
+        h = _new_hash()
+        h.update(np.int64(self._n).tobytes())
+        for col in self._cols:
+            h.update(col.digest())
+        return h.hexdigest()
+
+
+def edge_fingerprint(n: int, u, v, w) -> str:
+    """Content fingerprint of an edge multiset: hash over (n, u, v, w).
+
+    O(s) over raw bytes — cheap relative to any plan build (sorting,
+    capacity histograms), and the cross-process cache key for the
+    encoder's persistent plan tier.  ORDER-SENSITIVE by design: plan
+    artifacts (packing layouts, chunk boundaries) depend on edge order,
+    so a permuted multiset correctly reads as different content."""
+    return FingerprintAccumulator(n).update(u, v, w).digest()
+
+
+def extend_fingerprint(fp: str, u, v, w) -> str:
+    """Chain an appended edge batch onto an existing fingerprint.
+
+    fp' = H(fp || u || v || w): lets an append-only log (the serving
+    store) maintain its multiset fingerprint in O(batch) per delta
+    instead of rehashing the full edge list.  The chained value differs
+    from `edge_fingerprint` of the concatenated arrays — that is fine:
+    any process replaying the same base + delta sequence reaches the
+    same value, which is all a cache key needs."""
+    h = _new_hash()
+    h.update(bytes.fromhex(fp))
+    _hash_edges(h, u, v, w)
+    return h.hexdigest()
 
 
 @dataclass
@@ -25,6 +96,19 @@ class Graph:
     @property
     def s(self) -> int:
         return int(self.u.shape[0])
+
+    def fingerprint(self) -> str:
+        """Content fingerprint (see `edge_fingerprint`), computed once
+        and cached on the instance.  Sources that already know the
+        fingerprint (the serving store's incrementally-maintained one,
+        a generator's parameter hash) pre-stamp `_fp` so materializing
+        a graph never forces a rehash.  Assumes the arrays are not
+        mutated in place afterwards (nothing in this codebase does)."""
+        fp = getattr(self, "_fp", None)
+        if fp is None:
+            fp = edge_fingerprint(self.n, self.u, self.v, self.w)
+            self._fp = fp
+        return fp
 
     def validate(self) -> None:
         assert self.u.shape == self.v.shape == self.w.shape

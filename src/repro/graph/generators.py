@@ -6,6 +6,15 @@ import numpy as np
 
 from repro.graph.edges import Graph
 
+#: Bump whenever any generator's SAMPLING changes (not just its
+#: signature).  `SyntheticSource` fingerprints a generator CALL instead
+#: of the produced arrays, which is only sound while equal (kind,
+#: params) implies equal output — this version, plus the numpy release
+#: (Generator bit streams are not guaranteed stable across numpy
+#: versions), is folded into that fingerprint so a sampling change can
+#: never resurrect a stale plan from the persistent cache.
+GENERATORS_VERSION = 1
+
 
 def erdos_renyi(n: int, s: int, seed: int = 0, weighted: bool = False
                 ) -> Graph:

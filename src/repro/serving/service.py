@@ -17,6 +17,13 @@ the projection weights Wv, the service owns *when* to rebuild.
   `Embedder.fit` and starts a new epoch.
 * **Compaction** rewrites the store's base multiset and always ends in
   a rebuild, so epochs also advance on compaction.
+* **Cold starts are plan-cache hits.**  The service embeds through a
+  `StoreSource`, and the store maintains the multiset's content
+  fingerprint incrementally — so a fresh replica (or a restart) booting
+  from the same snapshot + delta sequence finds the plan's host half in
+  the persistent cache (`repro.encoder.plan_cache`) and skips host
+  preprocessing entirely.  `plan_cache` plumbs through to the Embedder
+  ("auto" = honor REPRO_PLAN_CACHE; None disables).
 
 Invariant (tested): with no pending label churn, Z equals a
 from-scratch `gee` over the store's live multiset, to float tolerance.
@@ -27,6 +34,7 @@ import numpy as np
 
 from repro.encoder import Embedder, EncoderConfig
 from repro.graph.edges import Graph
+from repro.graph.sources import StoreSource
 from repro.serving import queries as Q
 from repro.serving.store import GraphStore
 
@@ -35,12 +43,14 @@ class EmbeddingService:
     """Serves Z for a live graph; delta-maintains, rebuilds on churn."""
 
     def __init__(self, store: GraphStore, *, rebuild_churn: float = 0.05,
-                 chunk_size: int = 1 << 20, backend: str = "streaming"):
+                 chunk_size: int = 1 << 20, backend: str = "streaming",
+                 plan_cache="auto"):
         self.store = store
+        self.source = StoreSource(store)
         self.rebuild_churn = float(rebuild_churn)
         self.embedder = Embedder(
             EncoderConfig(K=store.K, chunk_size=int(chunk_size)),
-            backend=backend)
+            backend=backend, plan_cache=plan_cache)
         self.epoch = 0
         self.deltas_applied = 0
         self.rebuilds = 0
@@ -51,7 +61,7 @@ class EmbeddingService:
     def _rebuild(self) -> None:
         """Full re-embed under the store's current labels; new epoch."""
         self.Y_epoch = self.store.Y.copy()
-        self.embedder.fit(self.store.edges(), self.Y_epoch)
+        self.embedder.fit(self.source, self.Y_epoch)
         self.version = self.store.version
         self.epoch += 1
         self.rebuilds += 1
@@ -104,6 +114,7 @@ class EmbeddingService:
                 "rebuilds": self.rebuilds, "churn": self.churn,
                 "log_edges": self.store.log_edges,
                 "base_edges": self.store.base.s,
+                "fingerprint": self.store.fingerprint(),
                 "plan_stats": dict(self.embedder.plan_stats)}
 
     # -- writes ------------------------------------------------------------

@@ -16,6 +16,16 @@ the service's next rebuild.  Snapshots go through `graph/io.py`
 (`save_graph`/`load_graph`) plus a sibling `.meta.npz` for labels and
 counters, so a snapshot can be re-served or streamed back through
 `ShardedEdgeReader`.
+
+The store also maintains the multiset's **content fingerprint** — the
+key of the encoder's persistent plan cache — incrementally: the base's
+fingerprint is hashed once, then each logged edge batch is CHAINED on
+in O(batch) (`extend_fingerprint`), so a store serving billions of
+edges never rehashes its edge list.  `edges()` stamps the fingerprint
+onto the materialized graph; two replicas replaying the same snapshot
++ delta sequence therefore agree on it and share plan-cache entries.
+Label updates leave it untouched (labels are not part of the edge
+multiset); compaction rewrites the base arrays and rehashes them once.
 """
 from __future__ import annotations
 
@@ -23,7 +33,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.graph.edges import Graph, bucket_size   # noqa: F401 (re-export)
+from repro.graph.edges import (Graph, bucket_size,   # noqa: F401 (re-export)
+                               extend_fingerprint)
 from repro.graph.io import load_graph, save_graph
 
 _ZERO_W = 1e-12       # coalesced weights below this are dropped
@@ -53,6 +64,7 @@ class GraphStore:
         self.version = 0
         self.compactions = 0
         self.edge_log: list[EdgeDelta] = []
+        self._fp = self.base.fingerprint()     # hashed once, then chained
 
     # -- delta application ------------------------------------------------
 
@@ -65,8 +77,9 @@ class GraphStore:
         w = np.asarray(w, np.float32)
         Graph(u, v, w, self.base.n).validate()
         self.version += 1
-        self.edge_log.append(EdgeDelta(
-            self.version, u, v, -w if delete else w))
+        w = -w if delete else w
+        self.edge_log.append(EdgeDelta(self.version, u, v, w))
+        self._fp = extend_fingerprint(self._fp, u, v, w)   # O(batch)
         return self.version
 
     def apply_labels(self, nodes, labels) -> int:
@@ -95,15 +108,24 @@ class GraphStore:
     def log_edges(self) -> int:
         return sum(d.u.shape[0] for d in self.edge_log)
 
+    def fingerprint(self) -> str:
+        """Content fingerprint of the live multiset (chained, O(batch)
+        per delta — never a full rehash while the log grows)."""
+        return self._fp
+
     def edges(self) -> Graph:
-        """Current edge multiset = base ++ log (deletes as negative w)."""
+        """Current edge multiset = base ++ log (deletes as negative w),
+        fingerprint pre-stamped so downstream plan caching never
+        rehashes the materialized arrays."""
         if not self.edge_log:
             return self.base
-        return Graph(
+        g = Graph(
             np.concatenate([self.base.u] + [d.u for d in self.edge_log]),
             np.concatenate([self.base.v] + [d.v for d in self.edge_log]),
             np.concatenate([self.base.w] + [d.w for d in self.edge_log]),
             self.base.n)
+        g._fp = self._fp
+        return g
 
     def churn_fraction(self, Y_epoch: np.ndarray) -> float:
         """Fraction of nodes whose label differs from an epoch snapshot."""
@@ -128,6 +150,9 @@ class GraphStore:
                           (uniq % g.n).astype(np.int32),
                           w.astype(np.float32), g.n)
         self.edge_log.clear()
+        # coalescing rewrote the arrays: rehash once (plan artifacts
+        # depend on the physical edge list, so the identity SHOULD move)
+        self._fp = self.base.fingerprint()
         self.compactions += 1
         return {"edges_before": before, "edges_after": self.base.s,
                 "compactions": self.compactions}

@@ -1,8 +1,15 @@
 # NOTE: no XLA_FLAGS here by design — smoke tests and benches must see
 # the real single CPU device; only launch/dryrun.py (and explicit
 # subprocess tests) request 512 placeholder devices.
+import os
 
 
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running (subprocess compile) tests")
+    # Hermetic tests: the encoder's PERSISTENT plan-cache tier would
+    # otherwise write to the user's real cache dir and make identity-
+    # tier counter assertions order-dependent.  Tests that exercise the
+    # persistent tier opt back in with explicit plan_cache dirs (or set
+    # the env var themselves in subprocesses).
+    os.environ["REPRO_PLAN_CACHE"] = "off"

@@ -174,7 +174,8 @@ class TestPlanCache:
         emb.fit(g, Y)
         emb.fit(g, Y)
         emb.refit(Y)
-        assert emb.plan_stats == {"built": 1, "hits": 2}
+        assert emb.plan_stats == {"built": 1, "hits": 2,
+                                  "disk_hits": 0, "disk_stores": 0}
 
     def test_new_arrays_rebuild_plan(self):
         g, Y = _cases()["weighted_directed"]
@@ -206,9 +207,117 @@ class TestPlanCache:
         emb.fit(g, Y)
         Y2 = make_labels(g.n, 5, 0.7, np.random.default_rng(42))
         emb.refit(Y2)
-        assert emb.plan_stats == {"built": 1, "hits": 1}
+        assert emb.plan_stats == {"built": 1, "hits": 1,
+                                  "disk_hits": 0, "disk_stores": 0}
         np.testing.assert_allclose(emb.transform(), _oracle(g, Y2, 5),
                                    atol=1e-5)
+
+
+class TestPersistentPlanCache:
+    """Tier 2 (content-addressed, on-disk) of the plan cache; the
+    cross-PROCESS acceptance tests live in tests/test_plan_cache.py —
+    here we prove in-process that disk-loaded plans compute the same Z
+    for every persistable backend."""
+
+    @pytest.mark.parametrize("backend", ALL_BACKENDS)
+    @pytest.mark.parametrize("laplacian", [False, True])
+    def test_z_agreement_from_disk_plans(self, backend, laplacian,
+                                         tmp_path):
+        g, Y = _cases()["weighted_directed"]
+        cfg = EncoderConfig(K=5, laplacian=laplacian, **CFG)
+        warm = Embedder(cfg, backend=backend, plan_cache=tmp_path)
+        warm.fit(g, Y)
+        assert warm.plan_stats["disk_stores"] == 1
+        # a fresh Embedder has an empty identity tier: the plan can only
+        # come from disk
+        cold = Embedder(cfg, backend=backend, plan_cache=tmp_path)
+        cold.fit(g, Y)
+        assert cold.plan_stats == {"built": 0, "hits": 0,
+                                   "disk_hits": 1, "disk_stores": 0}
+        np.testing.assert_allclose(
+            cold.transform(), _oracle(g, Y, 5, laplacian=laplacian),
+            atol=1e-4)
+        assert cold.last_info_.get("dropped", 0) == 0
+
+    def test_config_and_content_key_the_entry(self, tmp_path):
+        g, Y = _cases()["weighted_directed"]
+        Embedder(EncoderConfig(K=5), backend="xla",
+                 plan_cache=tmp_path).fit(g, Y)
+        # different config (laplacian changes w_eff) must MISS
+        other = Embedder(EncoderConfig(K=5, laplacian=True),
+                         backend="xla", plan_cache=tmp_path)
+        other.fit(g, Y)
+        assert other.plan_stats["disk_hits"] == 0
+        assert other.plan_stats["built"] == 1
+        # different content must MISS
+        g2 = Graph(g.u.copy(), g.v.copy(),
+                   (g.w + 1.0).astype(np.float32), g.n)
+        third = Embedder(EncoderConfig(K=5), backend="xla",
+                         plan_cache=tmp_path)
+        third.fit(g2, Y)
+        assert third.plan_stats["disk_hits"] == 0
+        # same content in NEW arrays must HIT (content identity, not
+        # array identity — the whole point of tier 2)
+        fourth = Embedder(EncoderConfig(K=5), backend="xla",
+                          plan_cache=tmp_path)
+        fourth.fit(Graph(g.u.copy(), g.v.copy(), g.w.copy(), g.n), Y)
+        assert fourth.plan_stats == {"built": 0, "hits": 0,
+                                     "disk_hits": 1, "disk_stores": 0}
+
+
+class TestAutoBackend:
+    def test_policy_table_resolution(self):
+        from repro.encoder import resolve_auto
+        assert resolve_auto(100, 50, device_kind="cpu",
+                            device_count=1) == "xla"
+        assert resolve_auto(100, 50, device_kind="tpu",
+                            device_count=1) == "pallas"
+        assert (resolve_auto(100, 50, device_kind="cpu", device_count=8)
+                == "distributed:reduce_scatter")
+        assert resolve_auto(10, 1 << 40, device_kind="cpu",
+                            device_count=1) == "streaming"
+
+    def test_policy_table_is_overridable(self):
+        from repro.encoder import AUTO_POLICY, resolve_auto
+        AUTO_POLICY.insert(0, ("pin", lambda n, s, k, c: "numpy"))
+        try:
+            assert resolve_auto(100, 50, device_kind="tpu",
+                                device_count=8) == "numpy"
+        finally:
+            AUTO_POLICY.pop(0)
+
+    def test_auto_fit_resolves_and_matches_oracle(self):
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5, **CFG))    # backend="auto"
+        assert emb.backend is None                   # deferred to plan()
+        emb.fit(g, Y)
+        assert emb.backend.name == "xla"             # 1 CPU, small s
+        np.testing.assert_allclose(emb.transform(), _oracle(g, Y, 5),
+                                   atol=1e-5)
+        emb.refit(Y)                                 # identity tier holds
+        assert emb.plan_stats["hits"] == 1
+
+    def test_auto_shares_cache_entries_with_explicit_name(self, tmp_path):
+        """auto->xla and backend="xla" must address the SAME persistent
+        entry (the resolved name keys the cache, not the spec)."""
+        g, Y = _cases()["weighted_directed"]
+        cfg = EncoderConfig(K=5, **CFG)
+        Embedder(cfg, backend="xla", plan_cache=tmp_path).fit(g, Y)
+        auto = Embedder(cfg, plan_cache=tmp_path)
+        auto.fit(g, Y)
+        assert auto.plan_stats["disk_hits"] == 1
+
+    def test_graph_source_front_door(self):
+        """fit/plan accept a GraphSource anywhere a Graph is accepted."""
+        from repro.graph.sources import SyntheticSource
+        src = SyntheticSource("erdos_renyi", n=130, s=700, seed=2,
+                              weighted=True)
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5), backend="xla").fit(src, Y)
+        np.testing.assert_allclose(emb.transform(), _oracle(g, Y, 5),
+                                   atol=1e-5)
+        with pytest.raises(TypeError, match="GraphSource"):
+            Embedder(EncoderConfig(K=5), backend="xla").fit(object(), Y)
 
 
 class TestEmbedderContract:

@@ -1,0 +1,177 @@
+"""Persistent plan-cache tier: the cross-process acceptance criteria.
+
+  * a SECOND PROCESS embedding the same graph gets a persistent hit —
+    no host repacking — asserted via the Embedder's cache counters from
+    real subprocesses;
+  * a corrupted cache entry falls back to a correct rebuild (and is
+    replaced);
+  * a stale entry (older format / plan_version) reads as a miss;
+  * writes are atomic and keyed entries verify their full metadata.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.ref_python import gee_numpy
+from repro.encoder import Embedder, EncoderConfig, get_backend
+from repro.encoder.plan_cache import PlanDiskCache, default_cache
+from repro.graph.edges import make_labels
+from repro.graph.generators import erdos_renyi
+from repro.graph.io import save_graph
+
+CFG = dict(tile_n=64, edge_block=128)
+
+# The child embeds a snapshot through the SnapshotSource front door with
+# the persistent cache pointed at argv's dir (via REPRO_PLAN_CACHE, so
+# the env-resolution path is covered too), then reports its plan
+# counters and a Z checksum on stdout.
+CHILD = r"""
+import json, sys
+import numpy as np
+from repro.encoder import Embedder, EncoderConfig
+from repro.graph.edges import make_labels
+from repro.graph.sources import SnapshotSource
+
+src = SnapshotSource(sys.argv[1])
+g = src.graph()
+Y = make_labels(g.n, 5, 0.4, np.random.default_rng(0))
+emb = Embedder(EncoderConfig(K=5, tile_n=64, edge_block=128),
+               backend="pallas")
+emb.fit(src, Y)
+print(json.dumps({"stats": emb.plan_stats,
+                  "zsum": float(np.abs(emb.transform()).sum())}))
+"""
+
+
+def _run_child(snapshot: str, cache_dir: str) -> dict:
+    env = dict(os.environ)
+    # repro is a namespace package: resolve its root from __path__
+    src_root = str(Path(next(iter(repro.__path__))).resolve().parent)
+    env["PYTHONPATH"] = src_root + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_PLAN_CACHE"] = cache_dir
+    out = subprocess.run([sys.executable, "-c", CHILD, snapshot],
+                         env=env, capture_output=True, text=True,
+                         timeout=300)
+    assert out.returncode == 0, out.stderr
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_second_process_gets_persistent_hit(tmp_path):
+    g = erdos_renyi(130, 700, seed=2, weighted=True)
+    snap = str(tmp_path / "g.npz")
+    save_graph(snap, g)
+    cache = str(tmp_path / "plans")
+
+    first = _run_child(snap, cache)
+    assert first["stats"] == {"built": 1, "hits": 0,
+                              "disk_hits": 0, "disk_stores": 1}
+    second = _run_child(snap, cache)
+    # the load-bearing claim: a fresh process never repacked — the plan
+    # came off disk
+    assert second["stats"] == {"built": 0, "hits": 0,
+                               "disk_hits": 1, "disk_stores": 0}
+    assert second["zsum"] == pytest.approx(first["zsum"], rel=1e-6)
+
+
+def _fit(tmp_path, g, Y, **kw):
+    emb = Embedder(EncoderConfig(K=5, **CFG), backend="pallas",
+                   plan_cache=tmp_path, **kw)
+    emb.fit(g, Y)
+    return emb
+
+
+def test_corrupt_entry_falls_back_to_rebuild(tmp_path):
+    g = erdos_renyi(90, 400, seed=4, weighted=True)
+    Y = make_labels(90, 5, 0.4, np.random.default_rng(1))
+    _fit(tmp_path, g, Y)
+    [entry] = list(Path(tmp_path).glob("*.npz"))
+    entry.write_bytes(b"not an npz at all")
+
+    emb = _fit(tmp_path, g, Y)                 # must not crash
+    assert emb.plan_stats == {"built": 1, "hits": 0,
+                              "disk_hits": 0, "disk_stores": 1}
+    np.testing.assert_allclose(emb.transform(),
+                               gee_numpy(g.u, g.v, g.w, Y, 5, g.n),
+                               atol=1e-5)
+    # the rebuild REPLACED the corrupt entry: next process hits again
+    emb2 = _fit(tmp_path, g, Y)
+    assert emb2.plan_stats["disk_hits"] == 1
+
+
+def test_stale_entry_is_a_miss(tmp_path):
+    """An entry written by an older plan format (simulated by doctoring
+    the stored metadata) must read as a miss, never as a wrong plan."""
+    g = erdos_renyi(90, 400, seed=4, weighted=True)
+    Y = make_labels(90, 5, 0.4, np.random.default_rng(1))
+    _fit(tmp_path, g, Y)
+
+    cache = PlanDiskCache(tmp_path)
+    cfg = EncoderConfig(K=5, **CFG)
+    meta = cache.describe(g.fingerprint(), get_backend("pallas"), cfg)
+    path = cache.path(meta)
+    with np.load(path, allow_pickle=False) as d:
+        host = {k: d[k] for k in d.files if k != "__meta__"}
+    doctored = dict(meta, plan_version=meta["plan_version"] + 1)
+    with open(path, "wb") as f:
+        np.savez(f, __meta__=np.asarray(json.dumps(doctored)), **host)
+
+    assert cache.load(meta) is None            # stale -> miss
+    emb = _fit(tmp_path, g, Y)                 # -> correct rebuild
+    assert emb.plan_stats["built"] == 1
+    np.testing.assert_allclose(emb.transform(),
+                               gee_numpy(g.u, g.v, g.w, Y, 5, g.n),
+                               atol=1e-5)
+
+
+def test_atomic_writes_leave_no_tmp_droppings(tmp_path):
+    g = erdos_renyi(60, 200, seed=1)
+    Y = make_labels(60, 3, 0.5, np.random.default_rng(0))
+    emb = Embedder(EncoderConfig(K=3, **CFG), backend="pallas",
+                   plan_cache=tmp_path)
+    emb.fit(g, Y)
+    names = [p.name for p in Path(tmp_path).iterdir()]
+    assert len(names) == 1 and not any(".tmp" in x for x in names)
+
+
+def test_unwritable_cache_never_breaks_embedding(tmp_path):
+    target = tmp_path / "blocked"
+    target.write_text("a file where the cache dir should go")
+    g = erdos_renyi(60, 200, seed=1)
+    Y = make_labels(60, 3, 0.5, np.random.default_rng(0))
+    emb = Embedder(EncoderConfig(K=3, **CFG), backend="pallas",
+                   plan_cache=target)           # mkdir will fail
+    emb.fit(g, Y)                               # still embeds
+    assert emb.plan_stats["built"] == 1
+    assert emb.plan_stats["disk_stores"] == 0
+
+
+def test_clear_and_entries(tmp_path):
+    g = erdos_renyi(60, 200, seed=1)
+    Y = make_labels(60, 3, 0.5, np.random.default_rng(0))
+    _ = Embedder(EncoderConfig(K=3, **CFG), backend="pallas",
+                 plan_cache=tmp_path).fit(g, Y)
+    _ = Embedder(EncoderConfig(K=4, **CFG), backend="pallas",
+                 plan_cache=tmp_path).fit(g, Y)
+    cache = PlanDiskCache(tmp_path)
+    assert len(cache.entries()) == 2
+    assert cache.clear() == 2
+    assert cache.entries() == []
+
+
+def test_default_cache_env_resolution(monkeypatch, tmp_path):
+    for off in ("off", "0", "", "none", "DISABLED"):
+        monkeypatch.setenv("REPRO_PLAN_CACHE", off)
+        assert default_cache() is None
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "p"))
+    cache = default_cache()
+    assert cache is not None and cache.root == tmp_path / "p"
+    monkeypatch.delenv("REPRO_PLAN_CACHE")
+    monkeypatch.setenv("XDG_CACHE_HOME", str(tmp_path / "xdg"))
+    assert default_cache().root == tmp_path / "xdg" / "repro-gee" / "plans"
