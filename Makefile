@@ -23,13 +23,19 @@ install:
 install-dev:
 	$(PY) -m pip install -e ".[test,lint]"
 
-# Smoke the online embedding service on a small SBM workload.
+# Smoke the online serving engine on a small SBM workload (sharded).
 serve-demo:
-	$(PY) -m repro.serving.server --n 1000 --edges 20000 --steps 12
+	$(PY) -m repro.serving.server --n 1000 --edges 20000 --steps 12 \
+		--shards $(SHARDS)
 
-# Update-latency vs full re-embed + query throughput (>=1M edges).
+# Update-latency vs full re-embed + query throughput (>=1M edges),
+# plus the sharded ServingEngine path (delta fan-out, scatter/gather
+# top-k, WAL overhead, recovery).  `make bench-serving SHARDS=4` for
+# more shards, `QUICK=1` for the tiny-graph smoke variant.
+SHARDS ?= 2
 bench-serving:
-	$(PY) -m benchmarks.run --only serving
+	$(PY) -m benchmarks.run --only serving --shards $(SHARDS) \
+		$(if $(QUICK),--quick)
 
 # Unified Embedder API: per-backend edges/s + plan-cache effect.
 bench-encoder:

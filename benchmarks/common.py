@@ -11,6 +11,10 @@ import jax
 #: in seconds — a rot canary, not a measurement.
 QUICK = False
 
+#: set by `benchmarks.run --shards N`: shard count for the serving
+#: suite's partitioned-engine rows (`make bench-serving SHARDS=N`).
+SHARDS = 2
+
 
 def pick(full, quick):
     """Suite-size helper: `full` normally, `quick` under --quick."""

@@ -32,10 +32,15 @@ def main() -> None:
                          "chosen driver end-to-end in seconds (the "
                          "`make bench-smoke` CI gate), numbers are NOT "
                          "meaningful measurements")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="shard count for the serving suite's "
+                         "partitioned-engine rows (default 2)")
     args = ap.parse_args()
+    from benchmarks import common
     if args.quick:
-        from benchmarks import common
         common.QUICK = True
+    if args.shards is not None:
+        common.SHARDS = max(1, args.shards)
     chosen = args.only.split(",") if args.only else list(SUITES)
 
     print("name,us_per_call,derived")

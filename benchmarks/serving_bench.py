@@ -1,12 +1,21 @@
 """Serving-path benchmark: incremental update latency vs. full re-embed,
-plus query-kernel throughput, on a >=1M-edge synthetic graph.
+query-kernel throughput, and the sharded `ServingEngine` deployment
+path (delta fan-out, scatter/gather top-k, WAL append overhead, crash
+recovery) on a >=1M-edge synthetic graph.
 
 The headline row is `serving_speedup`: how much cheaper folding a
 1%-sized edge delta into Z (`gee_apply_delta`, padded to a power-of-two
-bucket exactly as `EmbeddingService` does) is than re-embedding the
-whole graph — the reason the online service exists.
+bucket exactly as the engine does) is than re-embedding the whole
+graph — the reason the online service exists.  The sharded rows run at
+1 and `--shards N` shards (`make bench-serving SHARDS=N`; the CI
+bench-smoke job runs them in `--quick` mode so the partitioned path
+cannot silently rot).
 """
 from __future__ import annotations
+
+import shutil
+import tempfile
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -69,3 +78,41 @@ def run() -> None:
     t = time_it(lambda: topk_cosine(Z, qnodes, k=10, block_rows=1 << 15),
                 iters=2)
     emit("serving_topk_256", t, f"{256 / t:,.0f}/s")
+
+    _sharded_engine_section(rng, g, Y, batch)
+
+
+def _sharded_engine_section(rng, g, Y, batch) -> None:
+    """The deployment path: per-shard-count delta fan-out + top-k
+    scatter/gather, WAL append-before-apply overhead, and cold
+    recovery (snapshot load + WAL replay + rebuild)."""
+    from repro.serving import GraphStore, ServingEngine
+
+    du, dv, dw = batch.u, batch.v, batch.w     # pre-padded 1% delta
+    qnodes = rng.integers(0, N, 256).astype(np.int32)
+    for p in sorted({1, max(1, common.SHARDS)}):
+        eng = ServingEngine(GraphStore(g, Y, K), num_shards=p,
+                            plan_cache=None)
+        t = time_it(lambda: eng.apply_edge_delta(du, dv, dw))
+        emit(f"serving_engine_delta_p{p}", t, f"batch={du.shape[0]}")
+        t = time_it(lambda: eng.query_topk(qnodes, k=10,
+                                           block_rows=1 << 15), iters=2)
+        emit(f"serving_engine_topk256_p{p}", t, f"{256 / t:,.0f}/s")
+
+    d = tempfile.mkdtemp(prefix="gee-bench-dep-")
+    try:
+        eng = ServingEngine(GraphStore(g, Y, K),
+                            num_shards=max(1, common.SHARDS),
+                            data_dir=d, plan_cache=None)
+        t = time_it(lambda: eng.apply_edge_delta(du, dv, dw))
+        emit("serving_engine_delta_wal", t,
+             f"batch={du.shape[0]} append-before-apply")
+        eng.close()
+        t0 = time.perf_counter()
+        rec = ServingEngine.open(d, plan_cache=None)
+        t = time.perf_counter() - t0
+        emit("serving_recovery_open", t,
+             f"wal_records={eng.stats()['durability']['wal_records']}")
+        rec.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)

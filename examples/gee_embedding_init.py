@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.embed_init import gee_embedding_init
+from repro.encoder.bridge import gee_embedding_init
 from repro.data.pipeline import DataConfig, SyntheticTokens
 from repro.models import model as M
 from repro.training.optimizer import AdamW

@@ -1,87 +1,112 @@
-"""Online GEE walkthrough: stand up the embedding service, mutate the
-graph live, query it, and watch the version/epoch model in action.
+"""Online GEE walkthrough: stand up a sharded, durable serving
+deployment, mutate the graph live, query it, crash it, and recover.
 
     python examples/serve_gee.py
 
 Story line:
-  1. Build an SBM graph, reveal 10% of the true labels, start the
-     service — Z is embedded once from scratch (epoch 1).
+  1. Build an SBM graph, reveal 10% of the true labels, start a
+     `ServingEngine` with 2 shards and a durable data dir — Z rows are
+     partitioned across shard workers, generation 0 is snapshotted,
+     and a write-ahead log opens (epoch 1).
   2. Fold in live edge inserts/deletes with O(batch) delta updates —
-     the version counter advances, the epoch does not.
-  3. Query through the microbatcher: gathers, label predictions,
-     top-k cosine neighbors — all coalesced into single kernel calls.
-  4. Reveal more labels: below the churn threshold the service keeps
-     serving epoch-1 Z; past it, a rebuild starts epoch 2.
-  5. Compact: the delta log folds into the base multiset and the
-     embedding is rebuilt fresh.
+     each batch is WAL-appended first, then fans out only to the
+     shards owning its endpoint rows.  version advances, epoch does
+     not.
+  3. Query through the microbatcher driven by the engine's background
+     flush loop: gathers, label predictions, top-k cosine neighbors —
+     coalesced into single scatter/gather passes across the shards.
+  4. Reveal more labels: below the churn threshold the engine keeps
+     serving epoch-1 Z; past it, every shard rebuilds (a plan-cache
+     hit per shard) and epoch 2 begins.
+  5. "Crash" (abandon the engine without a checkpoint), then
+     `ServingEngine.open` the same directory: the WAL replays onto the
+     generation-0 snapshot and reconstructs the exact
+     (version, epoch, fingerprint) state.
+
+`EmbeddingService` still exists as the 1-shard volatile special case
+(`EmbeddingService(store) == ServingEngine(store, num_shards=1)`);
+new code should construct the engine directly.
 """
+import shutil
+import tempfile
+
 import numpy as np
 import jax.numpy as jnp
 
 from repro.encoder import Embedder, EncoderConfig
 from repro.graph.edges import make_labels
 from repro.graph.generators import sbm
-from repro.serving import EmbeddingService, GraphStore, MicroBatcher
+from repro.serving import GraphStore, ServingEngine
 
 n, K, s = 1500, 6, 30_000
 rng = np.random.default_rng(0)
 g, truth = sbm(n, K, s, p_in=0.9, seed=0)
 Y = make_labels(n, K, 0.10, rng, true_labels=truth)
+data_dir = tempfile.mkdtemp(prefix="gee-deployment-")
 
-# -- 1. boot --------------------------------------------------------------
+# -- 1. boot a durable, sharded deployment --------------------------------
 store = GraphStore(g, Y, K)
-service = EmbeddingService(store, rebuild_churn=0.05)
-batcher = MicroBatcher(service, topk=5)
-print(f"boot: n={n} edges={s:,} -> epoch={service.epoch} "
-      f"version={service.version} "
-      f"fingerprint={store.fingerprint()[:12]}… "
-      f"plan={service.embedder.plan_stats}")
-# (the store maintains that fingerprint incrementally per delta; a
-# second replica booting from the same snapshot+deltas finds this
-# boot's plan in the persistent cache and skips host preprocessing)
+engine = ServingEngine(store, num_shards=2, data_dir=data_dir,
+                       rebuild_churn=0.05)
+batcher = engine.start()           # background flush loop + microbatcher
+print(f"boot: n={n} edges={s:,} shards={engine.num_shards} -> "
+      f"epoch={engine.epoch} version={engine.version} "
+      f"generation={engine.generation} "
+      f"fingerprint={engine.fingerprint()[:12]}…")
 
-# -- 2. live edge churn ---------------------------------------------------
+# -- 2. live edge churn (WAL-append, then fan out to owning shards) -------
 b = 500
 u = rng.integers(0, n, size=b).astype(np.int32)
 v = rng.integers(0, n, size=b).astype(np.int32)
 w = np.ones(b, np.float32)
-service.apply_edge_delta(u, v, w)                  # insert
-service.apply_edge_delta(u[:200], v[:200], w[:200], delete=True)
-print(f"after 2 edge deltas: version={service.version} "
-      f"epoch={service.epoch} (no rebuild — deltas are exact)")
+engine.apply_edge_delta(u, v, w)                  # insert
+engine.apply_edge_delta(u[:200], v[:200], w[:200], delete=True)
+print(f"after 2 edge deltas: version={engine.version} "
+      f"epoch={engine.epoch} (no rebuild — deltas are exact), "
+      f"wal_records={engine.stats()['durability']['wal_records']}")
 
 # prove exactness: from-scratch embed of the live multiset
 scratch = Embedder(EncoderConfig(K=K), backend="xla")
-scratch.fit(store.edges(), service.Y_epoch)
+scratch.fit(store.edges(), engine.Y_epoch)
 print(f"max|Z_delta - Z_scratch| = "
-      f"{float(jnp.max(jnp.abs(scratch.Z_ - service.Z))):.2e}")
+      f"{float(jnp.max(jnp.abs(scratch.Z_ - engine.Z))):.2e}")
 
-# -- 3. batched queries ---------------------------------------------------
+# -- 3. batched queries through the background loop -----------------------
 t_embed = batcher.submit("embed", rng.integers(0, n, 32))
 t_pred = batcher.submit("predict", rng.integers(0, n, 64))
 t_topk = batcher.submit("topk", rng.integers(0, n, 8))
-batcher.flush()
-pred, score = t_pred.result()
-nbr_idx, nbr_val = t_topk.result()
-print(f"queries: embed {t_embed.result().shape}, "
+pred, score = t_pred.result(timeout=60)
+nbr_idx, nbr_val = t_topk.result(timeout=60)
+print(f"queries: embed {t_embed.result(timeout=60).shape}, "
       f"predict acc vs truth = "
       f"{(pred == truth[np.asarray(t_pred.payload)]).mean():.2f}, "
-      f"top-5 neighbor sample = {nbr_idx[0].tolist()}")
+      f"top-5 neighbor sample = {nbr_idx[0][:5].tolist()}")
 
 # -- 4. label churn and the rebuild threshold -----------------------------
 few = rng.choice(n, size=int(0.02 * n), replace=False)
-service.apply_label_delta(few, truth[few])
-print(f"2% label reveal: churn={service.churn:.3f} "
-      f"epoch={service.epoch} (below threshold, epoch kept)")
+engine.apply_label_delta(few, truth[few])
+print(f"2% label reveal: churn={engine.churn:.3f} "
+      f"epoch={engine.epoch} (below threshold, epoch kept)")
 many = rng.choice(n, size=int(0.10 * n), replace=False)
-service.apply_label_delta(many, truth[many])
-print(f"10% label reveal: churn={service.churn:.3f} "
-      f"epoch={service.epoch} (threshold crossed -> rebuilt)")
+engine.apply_label_delta(many, truth[many])
+print(f"10% label reveal: churn={engine.churn:.3f} "
+      f"epoch={engine.epoch} (threshold crossed -> all shards rebuilt)")
+engine.stop()                      # drain the loop; leave WAL un-rotated
 
-# -- 5. compaction --------------------------------------------------------
-info = service.compact()
-print(f"compaction: {info['edges_before']:,} -> {info['edges_after']:,} "
-      f"edges, epoch={service.epoch}, log_edges={store.log_edges}")
-for kind, row in batcher.stats().items():
-    print(f"stats[{kind}]: {row['requests']} req in {row['batches']} "
-          f"batch(es), mean latency {row['mean_latency_ms']:.1f} ms")
+# -- 5. crash + recovery --------------------------------------------------
+triple = (engine.version, engine.epoch, engine.fingerprint())
+Z_live = np.asarray(engine.Z)
+del engine                         # "crash": no checkpoint, no close
+recovered = ServingEngine.open(data_dir)
+print(f"recovered: (version, epoch, fingerprint[:12]) = "
+      f"({recovered.version}, {recovered.epoch}, "
+      f"{recovered.fingerprint()[:12]}…) — exact match: "
+      f"{(recovered.version, recovered.epoch, recovered.fingerprint()) == triple}")
+print(f"max|Z_recovered - Z_live| = "
+      f"{np.abs(np.asarray(recovered.Z) - Z_live).max():.2e}")
+info = recovered.checkpoint()      # durable compaction: snapshot + rotate
+print(f"checkpoint: {info['edges_before']:,} -> {info['edges_after']:,} "
+      f"edges, generation={info['generation']}, "
+      f"epoch={recovered.epoch}")
+recovered.close()
+shutil.rmtree(data_dir)

@@ -1,60 +1,30 @@
-"""GEE <-> LM bridge: embedding-table initialization from a token
-co-occurrence graph.
+"""Deprecated: the GEE <-> LM bridge moved to `repro.encoder.bridge`.
 
-GEE's role in the original papers is a near-free spectral-like embedding.
-Here we apply it to the one place an LM has a graph: the vocabulary.
-Build a co-occurrence graph over token ids from the training stream
-(edge (a, b, count) when b follows a within a window), cluster it with
-unsupervised GEE refinement, embed to (V, K), then project K -> d_model
-with a fixed random rotation and blend with scaled noise.  This gives
-the embedding table a topic-structured starting point at O(s) cost.
+The bridge is now part of the unified Embedder API —
+``Embedder.to_features(d_model)`` projects any fitted embedding to a
+feature table, and `repro.encoder.bridge.gee_embedding_init` composes
+it with `token_cooccurrence` + unsupervised `Embedder.refine`.  This
+module lazily re-exports the old names with a deprecation warning so
+existing imports keep working.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import warnings
 
-from repro.core.gee import gee_refine
-from repro.graph.edges import Graph
+_MOVED = ("token_cooccurrence", "gee_embedding_init")
 
 
-def token_cooccurrence(tokens: np.ndarray, vocab: int, window: int = 2,
-                       max_edges: int = 2_000_000) -> Graph:
-    """tokens: (N,) int stream -> co-occurrence edge list (deduplicated
-    with counts as weights)."""
-    pairs = []
-    for d in range(1, window + 1):
-        a, b = tokens[:-d], tokens[d:]
-        pairs.append(np.stack([a, b], 1))
-    e = np.concatenate(pairs, 0)
-    key = e[:, 0].astype(np.int64) * vocab + e[:, 1]
-    uniq, counts = np.unique(key, return_counts=True)
-    if uniq.shape[0] > max_edges:
-        top = np.argsort(-counts)[:max_edges]
-        uniq, counts = uniq[top], counts[top]
-    u = (uniq // vocab).astype(np.int32)
-    v = (uniq % vocab).astype(np.int32)
-    return Graph(u, v, counts.astype(np.float32), vocab)
+def __getattr__(name):
+    if name in _MOVED:
+        warnings.warn(
+            f"repro.core.embed_init.{name} moved to "
+            f"repro.encoder.bridge.{name} (the Embedder front door: "
+            "Embedder.to_features); this shim will be removed",
+            DeprecationWarning, stacklevel=2)
+        from repro.encoder import bridge
+        return getattr(bridge, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def gee_embedding_init(tokens: np.ndarray, vocab: int, d_model: int,
-                       K: int = 64, key=None, window: int = 2,
-                       refine_iters: int = 6,
-                       blend: float = 0.5) -> np.ndarray:
-    """(vocab, d_model) initializer built from GEE over co-occurrences."""
-    key = key if key is not None else jax.random.PRNGKey(0)
-    g = token_cooccurrence(tokens, vocab, window)
-    K = min(K, max(2, vocab // 4))
-    Y0 = jnp.full((vocab,), -1, jnp.int32)
-    k1, k2, k3 = jax.random.split(key, 3)
-    Z, _ = gee_refine(jnp.asarray(g.u), jnp.asarray(g.v), jnp.asarray(g.w),
-                      Y0, k1, K=K, n=vocab, iters=refine_iters)
-    Z = Z / jnp.maximum(jnp.linalg.norm(Z, axis=1, keepdims=True), 1e-9)
-    # fixed random rotation K -> d_model (isometry-ish)
-    R = jax.random.normal(k2, (K, d_model), jnp.float32) / np.sqrt(K)
-    base = Z @ R
-    noise = jax.random.normal(k3, (vocab, d_model), jnp.float32)
-    scale = 1.0 / np.sqrt(d_model)
-    table = scale * (blend * base * np.sqrt(d_model) + (1 - blend) * noise)
-    return np.asarray(table, np.float32)
+def __dir__():
+    return sorted(_MOVED)

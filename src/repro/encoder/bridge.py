@@ -1,0 +1,60 @@
+"""GEE <-> LM bridge: embedding-table initialization from a token
+co-occurrence graph (the canonical home; `repro.core.embed_init` is a
+lazy deprecation shim over this module).
+
+GEE's role in the original papers is a near-free spectral-like
+embedding.  Here we apply it to the one place an LM has a graph: the
+vocabulary.  Build a co-occurrence graph over token ids from the
+training stream (edge (a, b, count) when b follows a within a window),
+cluster it with unsupervised GEE refinement through the unified
+`Embedder` front door, then project K -> d_model with
+`Embedder.to_features` (fixed random rotation + scaled-noise blend).
+This gives the embedding table a topic-structured starting point at
+O(s) cost, through the same plan-cached, backend-pluggable path as
+every other embedding in the system.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.encoder.config import EncoderConfig
+from repro.encoder.embedder import Embedder
+from repro.graph.edges import Graph
+
+
+def token_cooccurrence(tokens: np.ndarray, vocab: int, window: int = 2,
+                       max_edges: int = 2_000_000) -> Graph:
+    """tokens: (N,) int stream -> co-occurrence edge list (deduplicated
+    with counts as weights)."""
+    pairs = []
+    for d in range(1, window + 1):
+        a, b = tokens[:-d], tokens[d:]
+        pairs.append(np.stack([a, b], 1))
+    e = np.concatenate(pairs, 0)
+    key = e[:, 0].astype(np.int64) * vocab + e[:, 1]
+    uniq, counts = np.unique(key, return_counts=True)
+    if uniq.shape[0] > max_edges:
+        top = np.argsort(-counts)[:max_edges]
+        uniq, counts = uniq[top], counts[top]
+    u = (uniq // vocab).astype(np.int32)
+    v = (uniq % vocab).astype(np.int32)
+    return Graph(u, v, counts.astype(np.float32), vocab)
+
+
+def gee_embedding_init(tokens: np.ndarray, vocab: int, d_model: int,
+                       K: int = 64, key=None, window: int = 2,
+                       refine_iters: int = 6,
+                       blend: float = 0.5) -> np.ndarray:
+    """(vocab, d_model) initializer built from GEE over co-occurrences:
+    unsupervised `Embedder.refine` clustering, then
+    `Embedder.to_features`."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    g = token_cooccurrence(tokens, vocab, window)
+    K = min(K, max(2, vocab // 4))
+    k_refine, k_project = jax.random.split(key)
+    emb = Embedder(EncoderConfig(K=K, refine_iters=refine_iters),
+                   backend="xla")
+    emb.fit(g, np.full(vocab, -1, np.int32))
+    emb.refine(k_refine)
+    return emb.to_features(d_model, key=k_project, blend=blend)

@@ -293,3 +293,31 @@ class Embedder:
         """argmax-Z class prediction for `nodes` (all nodes if None)."""
         Z = self._rows(nodes)
         return np.asarray(jnp.argmax(Z, axis=1).astype(jnp.int32))
+
+    def to_features(self, d_model: int, *, key=None,
+                    blend: float = 0.5) -> np.ndarray:
+        """Project the fitted Z into an (n, d_model) feature table —
+        the GEE -> LM bridge (embedding-table initialization).
+
+        Rows of Z are unit-normalized, rotated K -> d_model with a
+        fixed random near-isometry, and blended with scaled Gaussian
+        noise; the result matches a standard 1/sqrt(d) init in scale
+        but starts topic-structured (nodes GEE places together get
+        similar feature rows).  ``blend`` in [0, 1]: 1 = pure
+        structure, 0 = pure noise."""
+        if self.Z_ is None:
+            raise NotFittedError("to_features() before fit()")
+        key = jax.random.PRNGKey(0) if key is None else key
+        k_rot, k_noise = jax.random.split(key)
+        Z = self.Z_ / jnp.maximum(
+            jnp.linalg.norm(self.Z_, axis=1, keepdims=True), 1e-9)
+        K = self.config.K
+        R = jax.random.normal(k_rot, (K, d_model),
+                              jnp.float32) / np.sqrt(K)
+        base = Z @ R
+        noise = jax.random.normal(k_noise, (self.n_, d_model),
+                                  jnp.float32)
+        scale = 1.0 / np.sqrt(d_model)
+        table = scale * (blend * base * np.sqrt(d_model)
+                         + (1 - blend) * noise)
+        return np.asarray(table, np.float32)

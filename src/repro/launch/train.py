@@ -81,7 +81,7 @@ def main(argv=None):
 
         params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
         if args.gee_embed_init:
-            from repro.core.embed_init import gee_embedding_init
+            from repro.encoder.bridge import gee_embedding_init
             stream = np.concatenate(
                 [np.asarray(get_batch(s)["tokens"]).reshape(-1)
                  for s in range(4)])

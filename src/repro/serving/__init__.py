@@ -1,10 +1,25 @@
-"""Online GEE embedding service.
+"""Online GEE serving deployment.
 
 Turns the offline edge-parallel embedding (`core/gee.py`) into a live
-system: a versioned graph store (`store.py`), an incrementally
-maintained embedding (`service.py`), jitted query kernels
-(`queries.py`), and a microbatching front-end (`batcher.py`).  The CLI
-driver (`server.py`) exercises the stack on a synthetic SBM workload.
+system built as a **deployment**, not a single object:
+
+* `ServingEngine` (`engine.py`) — the front door: a shard router over
+  N `EmbeddingShard` workers (`shard.py`, Z rows partitioned by
+  `graph.partition.RowPartition`; deltas fan out only to owning
+  shards, queries scatter/gather with a blocked top-k merge), a
+  durable write-ahead delta log (`wal.py`, append-before-apply, crash
+  recovery replays the WAL onto the last snapshot), and an async
+  flush/checkpoint loop (`start()`).
+* `GraphStore` (`store.py`) — the versioned in-memory edge multiset +
+  delta log the engine serializes.
+* `MicroBatcher` (`batcher.py`) — read coalescing and write barriers
+  over any serving target.
+* `EmbeddingService` (`service.py`) — DEPRECATED: the 1-shard volatile
+  special case of `ServingEngine`, kept as a compat shim.
+
+The CLI driver (`server.py`) exercises the stack on a synthetic SBM
+workload (`--shards N` for the partitioned path, `--data-dir` for
+durability + a recovery self-check).
 
 Version / epoch model (shared vocabulary across the subsystem):
 
@@ -13,11 +28,15 @@ Version / epoch model (shared vocabulary across the subsystem):
 * **epoch**   — the label/projection-weight generation the embedding Z
   was last *rebuilt* under.  Edge deltas fold into Z exactly (GEE is
   linear in the edge multiset), so Z tracks `version` without changing
-  `epoch`; label churn past a threshold, or a compaction, forces a
-  full rebuild and bumps `epoch`.
+  `epoch`; label churn past a threshold, a compaction, or a checkpoint
+  forces a full rebuild and bumps `epoch`.
 """
 from repro.serving.batcher import MicroBatcher
+from repro.serving.engine import ServingEngine
 from repro.serving.service import EmbeddingService
+from repro.serving.shard import EmbeddingShard
 from repro.serving.store import GraphStore
+from repro.serving.wal import WriteAheadLog
 
-__all__ = ["GraphStore", "EmbeddingService", "MicroBatcher"]
+__all__ = ["GraphStore", "ServingEngine", "EmbeddingShard",
+           "EmbeddingService", "MicroBatcher", "WriteAheadLog"]

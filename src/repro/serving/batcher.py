@@ -1,4 +1,4 @@
-"""Microbatching request queue for the embedding service.
+"""Microbatching request queue for the serving engine.
 
 Concurrent read requests of the same kind are coalesced into one
 kernel launch (node arrays concatenated, one gather / predict / top-k
@@ -6,6 +6,14 @@ call, results split back per ticket).  Writes are barriers: a write
 request flushes all reads queued before it, then runs alone against
 the store's version counter, so every read observes a single
 well-defined (version, epoch) and writes apply in submission order.
+
+The batcher is transport only — it talks to any **target** exposing
+the small serving protocol (`n`, `version`, `epoch`,
+`apply_edge_delta`, `apply_label_delta`, `query_embed`,
+`query_predict`, `query_topk`): the sharded `ServingEngine` and the
+1-shard `EmbeddingService` shim both do.  Kernel dispatch lives on the
+target, so the sharded scatter/gather path and the single-host path
+are interchangeable behind the same queue.
 
 Each ticket records the (version, epoch) it executed against plus wall
 latency; `stats()` aggregates per-kind counts, batch sizes, end-to-end
@@ -18,8 +26,10 @@ from `ticket.result()`; the rest of the queue is still served, so a
 producer can never be left hanging on a poisoned flush.
 
 Thread-safe: `submit` may be called from many threads; `flush` drains
-the queue under a lock (single consumer).  Tickets carry an Event so
-producers can block on `ticket.result()`.
+the queue under a lock (single consumer — `ServingEngine.start()` runs
+it in a background thread so submitters never block on kernel
+launches).  Tickets carry an Event so producers can block on
+`ticket.result()`.
 """
 from __future__ import annotations
 
@@ -30,9 +40,7 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.serving import queries as Q
-from repro.serving.service import EmbeddingService
-from repro.serving.store import bucket_size
+from repro.graph.edges import bucket_size
 
 READ_KINDS = ("embed", "predict", "topk")
 WRITE_KINDS = ("insert", "delete", "labels")
@@ -74,15 +82,20 @@ class _KindStats:
 class MicroBatcher:
     """Coalesces reads, serializes writes, keeps per-kind stats."""
 
-    def __init__(self, service: EmbeddingService, *, topk: int = 10,
+    def __init__(self, target, *, topk: int = 10,
                  topk_block_rows: int = 1 << 14):
-        self.service = service
+        self.target = target
         self.topk = int(topk)
         self.topk_block_rows = int(topk_block_rows)
         self._lock = threading.Lock()
         self._queue: list[Ticket] = []
         self._stats = {k: _KindStats()
                        for k in READ_KINDS + WRITE_KINDS}
+
+    @property
+    def service(self):
+        """Back-compat alias for the serving target."""
+        return self.target
 
     # -- producer side -----------------------------------------------------
 
@@ -125,8 +138,8 @@ class MicroBatcher:
                 error: Optional[BaseException] = None) -> None:
         t.value = value
         t.error = error
-        t.version = self.service.version
-        t.epoch = self.service.epoch
+        t.version = self.target.version
+        t.epoch = self.target.epoch
         t.latency = time.perf_counter() - t.submitted
         with self._lock:          # stats() reads under the same lock
             st = self._stats[t.kind]
@@ -147,11 +160,11 @@ class MicroBatcher:
         try:
             if t.kind == "labels":
                 nodes, labels = t.payload
-                version = self.service.apply_label_delta(nodes, labels)
+                version = self.target.apply_label_delta(nodes, labels)
                 items = len(np.atleast_1d(nodes))
             else:
                 u, v, w = t.payload
-                version = self.service.apply_edge_delta(
+                version = self.target.apply_edge_delta(
                     u, v, w, delete=(t.kind == "delete"))
                 items = len(np.atleast_1d(u))
         except Exception as e:        # bad batch: fail the ticket, not
@@ -170,7 +183,7 @@ class MicroBatcher:
         by_kind: dict[str, list[Ticket]] = {}
         for t in tickets:
             by_kind.setdefault(t.kind, []).append(t)
-        n = self.service.store.n
+        n = self.target.n
         for kind, group in by_kind.items():
             served, nodes, sizes = [], [], []
             for t in group:
@@ -208,18 +221,15 @@ class MicroBatcher:
 
     def _run_read_kernel(self, kind: str, cat: np.ndarray,
                          sizes: list[int]) -> list:
-        Z = self.service.Z
         if kind == "embed":
-            out = np.asarray(Q.gather_embeddings(Z, cat))
-            return self._split(out, sizes)
+            out = self.target.query_embed(cat)
+            return self._split(np.asarray(out), sizes)
         if kind == "predict":
-            pred, score = Q.predict_labels(Z, self.service.centroids(),
-                                           cat)
+            pred, score = self.target.query_predict(cat)
             return list(zip(self._split(np.asarray(pred), sizes),
                             self._split(np.asarray(score), sizes)))
-        idx, val = Q.topk_cosine(self.service.normalized_Z(), cat,
-                                 k=self.topk, pre_normalized=True,
-                                 block_rows=self.topk_block_rows)
+        idx, val = self.target.query_topk(
+            cat, k=self.topk, block_rows=self.topk_block_rows)
         return list(zip(self._split(idx, sizes),
                         self._split(val, sizes)))
 

@@ -1,0 +1,590 @@
+"""ServingEngine: the sharded, durable, async front door for online GEE.
+
+The serving subsystem's public API is a **deployment**, not an object
+holding all of Z in one place:
+
+* a **shard router** — Z rows are partitioned across N
+  `EmbeddingShard` workers by `graph.partition.RowPartition`; edge
+  deltas fan out only to the shards owning their endpoint rows, and
+  queries scatter/gather (row gathers go to owners; top-k scores every
+  shard's owned slice with global-id-stamped candidates and merges the
+  per-shard lists — `queries.merge_topk`);
+* a **durable write-ahead delta log** (`serving.wal`) — every accepted
+  mutation is appended BEFORE it is applied, so a crashed engine
+  recovers by replaying the WAL suffix on top of the last snapshot and
+  reconstructs the exact `(version, epoch, fingerprint)` state
+  (tested, including torn-tail truncation);
+* an **async flush/compaction loop** — `start()` runs a background
+  consumer that drains a `MicroBatcher` (reads coalesce between write
+  barriers; submitters never block on kernel launches) and rolls a
+  checkpoint — snapshot + WAL rotation — whenever the log outgrows
+  `checkpoint_bytes`, so log growth is bounded without a stop-the-world
+  pause on the submit path.
+
+The version/epoch model is unchanged from `repro.serving.__init__`;
+the epoch policy (delta-fold edges, rebuild on label churn past
+`rebuild_churn`) now drives all shards together, and every rebuild is
+a plan-cache hit per shard: the engine chains each shard's routed
+sub-multiset fingerprint delta-by-delta, mirroring the store's own
+chained fingerprint.
+
+`EmbeddingService` (service.py) remains as the 1-shard volatile
+special case — a thin compat shim over this class.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.edges import Graph, edge_fingerprint, extend_fingerprint
+from repro.graph.partition import RowPartition
+from repro.graph.sources import StoreSource
+from repro.serving import queries as Q
+from repro.serving import wal as W
+from repro.serving.shard import EmbeddingShard
+from repro.serving.store import GraphStore
+from repro.serving.wal import WriteAheadLog
+
+_MANIFEST = "MANIFEST"
+_FORMAT = 1
+
+
+def _atomic_write_json(path: str, obj: dict) -> None:
+    tmp = path + f".tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+    os.replace(tmp, path)
+
+
+class ServingEngine:
+    """Partitioned, durable, async serving deployment for a live GEE.
+
+    Construct fresh over a `GraphStore` (pass ``data_dir`` to make it
+    durable — the engine snapshots generation 0 and opens a WAL), or
+    recover an existing deployment with :meth:`open`.
+    """
+
+    def __init__(self, store: GraphStore, *, data_dir: Optional[str] = None,
+                 num_shards: int = 1, rebuild_churn: float = 0.05,
+                 chunk_size: int = 1 << 20, backend: str = "streaming",
+                 plan_cache: Union[str, None] = "auto",
+                 fsync: bool = False, _boot: bool = True):
+        self.store = store
+        self.source = StoreSource(store)
+        self.rebuild_churn = float(rebuild_churn)
+        self.fsync = bool(fsync)
+        self.partition = RowPartition(store.n, num_shards)
+        self.shards = [
+            EmbeddingShard(i, *self.partition.slice(i), K=store.K,
+                           chunk_size=chunk_size, backend=backend,
+                           plan_cache=plan_cache)
+            for i in range(num_shards)]
+        self.epoch = 0
+        self.rebuilds = 0
+        self.deltas_applied = 0
+        self.checkpoints = 0
+        self.version = store.version
+        self.Y_epoch = store.Y.copy()
+        self.data_dir: Optional[str] = None
+        self.generation: Optional[int] = None
+        self.wal: Optional[WriteAheadLog] = None
+        self._shard_fps: list = []
+        self._routed_for_build = None
+        self._centroids = None
+        self._mu = threading.RLock()
+        self._loop_thread: Optional[threading.Thread] = None
+        self._loop_stop: Optional[threading.Event] = None
+        #: last engine-level exception swallowed by the flush loop
+        self.loop_error: Optional[BaseException] = None
+        if not _boot:
+            return                      # open() finishes construction
+        if data_dir is None:
+            self._reset_shard_fps()
+            self._rebuild()
+        else:
+            self.data_dir = str(data_dir)
+            os.makedirs(self.data_dir, exist_ok=True)
+            if os.path.exists(os.path.join(self.data_dir, _MANIFEST)):
+                raise FileExistsError(
+                    f"{self.data_dir} already holds a deployment; "
+                    "recover it with ServingEngine.open()")
+            # fold the log so generation 0's snapshot IS the live state
+            self.store.compact()
+            self._reset_shard_fps()
+            self._rebuild()
+            self._write_generation(0)
+
+    # -- recovery ----------------------------------------------------------
+
+    @classmethod
+    def open(cls, data_dir: str, *, num_shards: Optional[int] = None,
+             rebuild_churn: Optional[float] = None,
+             chunk_size: int = 1 << 20, backend: str = "streaming",
+             plan_cache: Union[str, None] = "auto",
+             fsync: bool = False) -> "ServingEngine":
+        """Recover a deployment: load the manifest's snapshot, replay
+        the WAL suffix (append-before-apply means every applied
+        mutation is there), and rebuild Z once at the end.  The
+        recovered `(version, epoch, fingerprint)` triple — and the
+        epoch's label snapshot — exactly match the crashed process."""
+        data_dir = str(data_dir)
+        with open(os.path.join(data_dir, _MANIFEST)) as f:
+            gen = int(json.load(f)["generation"])
+        prefix = os.path.join(data_dir, f"snap-{gen}")
+        store = GraphStore.load(prefix)
+        with open(prefix + ".engine.json") as f:
+            emeta = json.load(f)
+        eng = cls(store,
+                  num_shards=(num_shards if num_shards is not None
+                              else int(emeta["num_shards"])),
+                  rebuild_churn=(rebuild_churn if rebuild_churn is not None
+                                 else float(emeta["rebuild_churn"])),
+                  chunk_size=chunk_size, backend=backend,
+                  plan_cache=plan_cache, fsync=fsync, _boot=False)
+        eng.data_dir = data_dir
+        eng.generation = gen
+        eng.epoch = int(emeta["epoch"])
+        eng.rebuilds = int(emeta["rebuilds"])
+        eng.deltas_applied = int(emeta["deltas_applied"])
+        eng.checkpoints = int(emeta.get("checkpoints", 0))
+        eng.Y_epoch = store.Y.copy()     # a snapshot always post-rebuild
+        eng._reset_shard_fps()
+        eng.wal = WriteAheadLog(
+            os.path.join(data_dir, f"wal-{gen}.log"), fsync=fsync)
+        for rec in eng.wal.open():       # replay; Z built once, after
+            eng._replay(rec)
+        eng.version = store.version
+        eng._embed_epoch()               # one fresh build == gee_streaming
+        return eng
+
+    def _replay(self, rec: W.WalRecord) -> None:
+        """Re-apply one WAL record to the store and the epoch counters
+        WITHOUT embedding (Z is built once after replay).  Mirrors the
+        live write path exactly, so epochs advance at the same points."""
+        if rec.kind == W.EDGES:          # weights arrive sign-folded
+            self.store.apply_edges(rec.a, rec.b, rec.c)
+            self._routed_for_build = None    # multiset moved: stash stale
+            if self.partition.p > 1:
+                for i, (su, sv, sw) in self.partition.route_edges(
+                        rec.a, rec.b, rec.c):
+                    self._shard_fps[i] = extend_fingerprint(
+                        self._shard_fps[i], su, sv, sw)
+            self.deltas_applied += 1
+        elif rec.kind == W.LABELS:
+            self.store.apply_labels(rec.a, rec.b)
+            if self.churn > self.rebuild_churn:
+                self._advance_epoch()
+        elif rec.kind == W.COMPACT:
+            self.store.compact()
+            self._reset_shard_fps()
+            self._advance_epoch()
+        elif rec.kind == W.REBUILD:
+            self._advance_epoch()
+
+    def _advance_epoch(self) -> None:
+        """Epoch bookkeeping shared by live rebuilds and replay."""
+        self.Y_epoch = self.store.Y.copy()
+        self.epoch += 1
+        self.rebuilds += 1
+
+    # -- shard plumbing ----------------------------------------------------
+
+    def _reset_shard_fps(self) -> None:
+        """(Re)derive each shard's sub-multiset fingerprint from the
+        live store — called whenever the base arrays are rewritten
+        (boot, compaction, recovery).  Subsequent deltas chain in
+        O(batch), mirroring `GraphStore.fingerprint`; replicas and
+        recovered engines replaying the same sequence agree, which is
+        what lets every shard's rebuild hit the persistent plan cache.
+
+        The routed dict is stashed for the `_embed_epoch` that every
+        caller runs next, so a reset+rebuild routes the multiset once,
+        not twice; any multiset change in between (WAL replay) must
+        drop the stash."""
+        if self.partition.p == 1:
+            return                       # the store's own chain is used
+        g = self.store.edges()
+        routed = {i: sub for i, sub in self.partition.route_graph(g)}
+        self._routed_for_build = routed
+        self._shard_fps = [
+            (routed[i].fingerprint() if i in routed
+             else edge_fingerprint(g.n, np.zeros(0, np.int32),
+                                   np.zeros(0, np.int32),
+                                   np.zeros(0, np.float32)))
+            for i in range(self.partition.p)]
+
+    def _embed_epoch(self) -> None:
+        """Build every shard's Z from the live multiset under the
+        current epoch labels (`Y_epoch`)."""
+        if self.partition.p == 1:
+            # the store source keeps array identity + the store's
+            # chained fingerprint — quiet-store rebuilds stay tier-1
+            # plan hits, cold starts tier-2, exactly like the old
+            # single-host service
+            self.shards[0].build(self.source, self.Y_epoch)
+        else:
+            routed, self._routed_for_build = self._routed_for_build, None
+            if routed is None:
+                routed = {i: sub for i, sub
+                          in self.partition.route_graph(self.store.edges())}
+            for i, shard in enumerate(self.shards):
+                sub = routed.get(i)
+                if sub is None:
+                    sub = Graph(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                                np.zeros(0, np.float32), self.n)
+                sub._fp = self._shard_fps[i]   # chained: never rehashed
+                shard.build(sub, self.Y_epoch)
+        self._invalidate_query_cache()
+
+    def _rebuild(self) -> None:
+        """Full re-embed under the store's current labels; new epoch."""
+        self._advance_epoch()
+        self._embed_epoch()
+        self.version = self.store.version
+
+    def _invalidate_query_cache(self) -> None:
+        self._centroids = None
+
+    # -- durability --------------------------------------------------------
+
+    def _write_generation(self, gen: int) -> None:
+        """Write snapshot + engine meta + fresh WAL, then flip the
+        manifest.  Crash anywhere before the manifest replace leaves
+        the previous generation fully intact."""
+        prefix = os.path.join(self.data_dir, f"snap-{gen}")
+        self.store.snapshot(prefix)
+        _atomic_write_json(prefix + ".engine.json", {
+            "format": _FORMAT, "epoch": self.epoch,
+            "rebuilds": self.rebuilds,
+            "deltas_applied": self.deltas_applied,
+            "checkpoints": self.checkpoints,
+            "num_shards": self.partition.p,
+            "rebuild_churn": self.rebuild_churn})
+        if self.wal is not None:
+            self.wal.close()
+        old = self.generation
+        self.wal = WriteAheadLog(
+            os.path.join(self.data_dir, f"wal-{gen}.log"),
+            fsync=self.fsync)
+        self.wal.open()
+        _atomic_write_json(os.path.join(self.data_dir, _MANIFEST),
+                           {"format": _FORMAT, "generation": gen})
+        self.generation = gen
+        if old is not None and old != gen:       # best-effort cleanup
+            for name in (f"snap-{old}.edges.npz", f"snap-{old}.meta.npz",
+                         f"snap-{old}.engine.json", f"wal-{old}.log"):
+                try:
+                    os.unlink(os.path.join(self.data_dir, name))
+                except OSError:
+                    pass
+
+    def checkpoint(self) -> dict:
+        """Durable compaction: fold the log into the base, rebuild
+        (new epoch), snapshot the result as a new generation, and
+        rotate the WAL.  Bounds both recovery time and log size."""
+        if self.data_dir is None:
+            raise RuntimeError("checkpoint() needs a durable engine "
+                               "(construct with data_dir=...)")
+        with self._mu:
+            info = self.store.compact()
+            self._reset_shard_fps()
+            self._rebuild()
+            self.checkpoints += 1      # before the meta write, so a
+            self._write_generation(self.generation + 1)   # recovered
+            info["generation"] = self.generation   # engine restores it
+            return info
+
+    def close(self) -> None:
+        """Stop the async loop (if running) and close the WAL."""
+        self.stop()
+        if self.wal is not None:
+            self.wal.close()
+
+    # -- writes ------------------------------------------------------------
+
+    def apply_edge_delta(self, u, v, w, *, delete: bool = False) -> int:
+        """Fold an edge batch into store + owning shards.  O(batch).
+        Appended to the WAL before any state changes; a bad batch
+        raises before either.  Returns the new version."""
+        u = np.asarray(u, np.int32)
+        v = np.asarray(v, np.int32)
+        w = np.asarray(w, np.float32)
+        with self._mu:
+            Graph(u, v, w, self.n).validate()    # reject BEFORE the WAL
+            wsigned = -w if delete else w
+            if self.wal is not None:
+                self.wal.append_edges(self.store.version + 1, u, v, wsigned)
+            version = self.store.apply_edges(u, v, w, delete=delete)
+            self._routed_for_build = None
+            if u.shape[0]:
+                for i, (su, sv, sw) in self.partition.route_edges(
+                        u, v, wsigned):
+                    if self.partition.p > 1:
+                        self._shard_fps[i] = extend_fingerprint(
+                            self._shard_fps[i], su, sv, sw)
+                    self.shards[i].apply_delta(Graph(su, sv, sw, self.n))
+                self._invalidate_query_cache()
+            self.version = version
+            self.deltas_applied += 1
+            return version
+
+    def apply_label_delta(self, nodes, labels) -> int:
+        """Update labels; rebuild every shard if churn passes the
+        threshold, otherwise keep serving the current epoch's Z."""
+        nodes = np.asarray(nodes, np.int64)
+        labels = np.asarray(labels, np.int32)
+        with self._mu:
+            assert nodes.shape == labels.shape   # reject BEFORE the WAL
+            if nodes.size:
+                assert nodes.min() >= 0 and nodes.max() < self.n
+                assert labels.min() >= -1 and labels.max() < self.store.K
+            if self.wal is not None:
+                self.wal.append_labels(self.store.version + 1, nodes,
+                                       labels)
+            version = self.store.apply_labels(nodes, labels)
+            self.version = version
+            if self.churn > self.rebuild_churn:
+                self._rebuild()
+            return version
+
+    def compact(self) -> dict:
+        """Compact the store and start a fresh epoch (volatile
+        compaction; `checkpoint()` is the durable version).  On a
+        durable engine a marker record keeps the WAL replayable."""
+        with self._mu:
+            if self.wal is not None:
+                self.wal.append_marker(W.COMPACT, self.store.version)
+            info = self.store.compact()
+            self._reset_shard_fps()
+            self._rebuild()
+            return info
+
+    def refresh(self) -> None:
+        """Force a rebuild (e.g. to pick up sub-threshold label churn)."""
+        with self._mu:
+            if self.wal is not None:
+                self.wal.append_marker(W.REBUILD, self.store.version)
+            self._rebuild()
+
+    # -- reads (scatter/gather across shards) ------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.store.n
+
+    @property
+    def num_shards(self) -> int:
+        return self.partition.p
+
+    def fingerprint(self) -> str:
+        return self.store.fingerprint()
+
+    @property
+    def churn(self) -> float:
+        return self.store.churn_fraction(self.Y_epoch)
+
+    @property
+    def stale_labels(self) -> int:
+        return int((self.store.Y != self.Y_epoch).sum())
+
+    @property
+    def Z(self):
+        """The live embedding, assembled from owned shard slices (for
+        1 shard this is the Embedder's own Z — no copy)."""
+        if self.partition.p == 1:
+            return self.shards[0].embedder.Z_
+        return jnp.concatenate([s.Z_owned for s in self.shards], 0)
+
+    @property
+    def Wv(self):
+        """Projection weights Z was built with (identical across
+        shards: all fit under the same epoch labels)."""
+        return self.shards[0].embedder.Wv_
+
+    @property
+    def embedder(self):
+        """The single Embedder — only meaningful for 1 shard (the
+        `EmbeddingService` compat surface)."""
+        if self.partition.p != 1:
+            raise AttributeError(
+                "a sharded engine has per-shard embedders "
+                "(engine.shards[i].embedder)")
+        return self.shards[0].embedder
+
+    def _check_nodes(self, nodes: np.ndarray) -> None:
+        if nodes.size and (nodes.min() < 0 or nodes.max() >= self.n):
+            raise IndexError(f"node ids must be in [0, {self.n}), got "
+                             f"range [{nodes.min()}, {nodes.max()}]")
+
+    def _gather_rows(self, nodes: np.ndarray) -> jnp.ndarray:
+        """Device-resident Z rows in request order: the shared gather
+        half of every read path.  1 shard is a direct device gather
+        (no host round-trip — the old single-host fast path); sharded
+        gathers scatter per owner and reassemble on device."""
+        if self.partition.p == 1:
+            return self.shards[0].rows(nodes)
+        out = jnp.zeros((nodes.shape[0], self.store.K), jnp.float32)
+        for shard, idx in self.partition.route_nodes(nodes):
+            out = out.at[jnp.asarray(idx)].set(
+                self.shards[shard].rows(nodes[idx]))
+        return out
+
+    def query_embed(self, nodes) -> np.ndarray:
+        """Z rows for a node batch: scatter to owning shards, gather
+        back in request order."""
+        nodes = np.atleast_1d(np.asarray(nodes, np.int32))
+        with self._mu:
+            self._check_nodes(nodes)
+            return np.asarray(self._gather_rows(nodes))
+
+    def centroids(self):
+        """Global class centroids: per-shard partial (sums, counts)
+        reduced at the router, divided once — equal to the single-host
+        `class_centroids`.  Cached until the next write/rebuild."""
+        with self._mu:
+            if self._centroids is None:
+                sums = counts = None
+                for shard in self.shards:
+                    s_, c_ = shard.class_stats(self.Y_epoch)
+                    sums = s_ if sums is None else sums + s_
+                    counts = c_ if counts is None else counts + c_
+                self._centroids = sums / jnp.maximum(counts[:, None], 1.0)
+            return self._centroids
+
+    def normalized_Z(self):
+        """Row-normalized Z (compat surface; shards cache their own
+        normalized slices for the top-k path)."""
+        with self._mu:
+            if self.partition.p == 1:
+                return self.shards[0].normalized()
+            return jnp.concatenate(
+                [s.normalized() for s in self.shards], 0)
+
+    def query_predict(self, nodes):
+        """Centroid label prediction: gather rows from owners (device-
+        resident), score against the merged centroids.  Returns
+        (pred, score)."""
+        nodes = np.atleast_1d(np.asarray(nodes, np.int32))
+        with self._mu:
+            self._check_nodes(nodes)
+            pred, score = Q.predict_rows(self._gather_rows(nodes),
+                                         self.centroids())
+            return np.asarray(pred), np.asarray(score)
+
+    def query_topk(self, nodes, *, k: int = 10,
+                   block_rows: int = 1 << 14):
+        """Top-k cosine neighbors: gather + normalize the query rows,
+        score them against every shard's owned slice (global-id-stamped
+        candidates), merge per-shard lists with a blocked top-k.
+        Returns (indices (q, k), scores (q, k))."""
+        nodes = np.atleast_1d(np.asarray(nodes, np.int32))
+        with self._mu:
+            self._check_nodes(nodes)
+            if self.partition.p == 1:
+                # gather from the CACHED normalized slice (the old
+                # single-host path: no re-normalization per query)
+                q = self.shards[0].normalized()[jnp.asarray(nodes)]
+            else:
+                q = Q.normalize_rows(self._gather_rows(nodes))
+            parts = [s.topk_candidates(q, nodes, k=k,
+                                       block_rows=block_rows)
+                     for s in self.shards]
+            if len(parts) == 1:
+                return parts[0]
+            return Q.merge_topk([p[0] for p in parts],
+                                [p[1] for p in parts], k=k)
+
+    # -- async flush / compaction loop -------------------------------------
+
+    def start(self, batcher=None, *, interval: float = 1e-3,
+              checkpoint_bytes: Optional[int] = None):
+        """Run the deployment's consumer in a background thread: drain
+        the batcher (coalesced reads between write barriers — writers
+        get a ticket back immediately and never block on kernel
+        launches), and roll a checkpoint whenever the WAL outgrows
+        `checkpoint_bytes`.  Returns the batcher to submit against."""
+        if self._loop_thread is not None:
+            raise RuntimeError("flush loop already running")
+        if batcher is None:
+            from repro.serving.batcher import MicroBatcher
+            batcher = MicroBatcher(self)
+        self._loop_batcher = batcher
+        self._loop_stop = threading.Event()
+        self._checkpoint_bytes = checkpoint_bytes
+        self._flush_interval = float(interval)
+        self._loop_thread = threading.Thread(
+            target=self._flush_loop, name="serving-flush", daemon=True)
+        self._loop_thread.start()
+        return batcher
+
+    def _flush_loop(self) -> None:
+        """The background consumer must never die silently: per-ticket
+        failures are already captured by the batcher, so an exception
+        here is engine-level (e.g. a checkpoint hitting a full disk).
+        It is recorded on `loop_error`, the failing auto-checkpoint is
+        disabled (rather than retried every iteration), and the loop
+        keeps draining — submitters keep getting answers instead of
+        hanging forever on a dead thread."""
+        while not self._loop_stop.is_set():
+            try:
+                served = self._loop_batcher.flush()
+            except Exception as e:       # engine bug: record, keep going
+                self.loop_error = e
+                served = 0
+            if (self.wal is not None
+                    and self._checkpoint_bytes is not None
+                    and self.wal.bytes_written > self._checkpoint_bytes):
+                try:
+                    self.checkpoint()
+                except Exception as e:
+                    self.loop_error = e
+                    self._checkpoint_bytes = None
+            if not served:
+                self._loop_stop.wait(self._flush_interval)
+
+    def stop(self) -> None:
+        """Stop the flush loop and drain anything still queued."""
+        if self._loop_thread is None:
+            return
+        self._loop_stop.set()
+        self._loop_thread.join()
+        self._loop_thread = None
+        self._loop_batcher.flush()       # nothing left behind
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._mu:
+            plan = {"built": 0, "hits": 0, "disk_hits": 0,
+                    "disk_stores": 0}
+            for s in self.shards:
+                for key, val in s.plan_stats.items():
+                    plan[key] += val
+            out = {"version": self.version, "epoch": self.epoch,
+                   "num_shards": self.partition.p,
+                   "deltas_applied": self.deltas_applied,
+                   "rebuilds": self.rebuilds, "churn": self.churn,
+                   "log_edges": self.store.log_edges,
+                   "base_edges": self.store.base.s,
+                   "fingerprint": self.store.fingerprint(),
+                   "plan_stats": plan}
+            if self.loop_error is not None:
+                out["loop_error"] = repr(self.loop_error)
+            if self.data_dir is not None:
+                out["durability"] = {
+                    "generation": self.generation,
+                    "checkpoints": self.checkpoints,
+                    "wal_records": self.wal.records_appended,
+                    "wal_bytes": self.wal.bytes_written}
+            return out
+
+    def __enter__(self) -> "ServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -11,6 +11,19 @@ many user requests into one kernel call):
   a time so peak memory is O(q · block_rows), not O(q · n), and the
   running top-k is merged with ``lax.top_k`` per block.
 
+Every kernel also exists in a **row-sliced** form for the sharded
+engine, where no process holds all of Z:
+
+* ``topk_cosine_q``      — top-k of externally supplied query vectors
+  against a candidate row block living at ``row_offset`` in the global
+  index space (a shard's owned slice); per-shard results merge exactly
+  because scores are global-id-stamped.
+* ``class_sums``         — per-class (sums, counts) over a row slice;
+  the engine reduces slices and divides once, so merged centroids
+  equal the single-host ``class_centroids``.
+* ``predict_rows``       — centroid prediction from gathered rows
+  (the engine gathers rows from owning shards first).
+
 Kernels are pure functions of (Z, ...) so they jit once per shape and
 stay valid across versions/epochs — the service just passes its
 current Z.
@@ -34,23 +47,40 @@ def normalize_rows(X, eps=1e-9):
 
 
 @functools.partial(jax.jit, static_argnames=("K",))
-def class_centroids(Z, Y, *, K: int):
-    """Mean embedding of each class's labeled nodes (K, K-dim)."""
-    labeled = (Y >= 0).astype(Z.dtype)
-    onehot = jax.nn.one_hot(jnp.maximum(Y, 0), K, dtype=Z.dtype)
+def class_sums(Z_rows, Y_rows, *, K: int):
+    """Per-class (sums (K, K), counts (K,)) over a row slice — the
+    shard-local half of `class_centroids`; sum across shards and divide
+    once to get the global centroids."""
+    labeled = (Y_rows >= 0).astype(Z_rows.dtype)
+    onehot = jax.nn.one_hot(jnp.maximum(Y_rows, 0), K, dtype=Z_rows.dtype)
     onehot = onehot * labeled[:, None]
-    sums = onehot.T @ Z
-    counts = onehot.sum(0)[:, None]
-    return sums / jnp.maximum(counts, 1.0)
+    return onehot.T @ Z_rows, onehot.sum(0)
+
+
+@functools.partial(jax.jit, static_argnames=("K",))
+def class_centroids(Z, Y, *, K: int):
+    """Mean embedding of each class's labeled nodes (K, K-dim).  THE
+    one copy of the masking/one-hot math is `class_sums`, so the
+    sharded merge (sum partials, divide once) cannot drift from the
+    single-host answer."""
+    sums, counts = class_sums(Z, Y, K=K)
+    return sums / jnp.maximum(counts[:, None], 1.0)
+
+
+@jax.jit
+def predict_rows(rows, centroids):
+    """Label = argmax cosine(row, centroid_k) for already-gathered rows.
+    Returns (pred, score)."""
+    q = normalize_rows(rows)
+    c = normalize_rows(centroids)
+    sims = q @ c.T
+    return jnp.argmax(sims, 1).astype(jnp.int32), jnp.max(sims, 1)
 
 
 @jax.jit
 def predict_labels(Z, centroids, nodes):
     """Label = argmax cosine(Z[node], centroid_k).  Returns (pred, score)."""
-    q = normalize_rows(Z[nodes])
-    c = normalize_rows(centroids)
-    sims = q @ c.T
-    return jnp.argmax(sims, 1).astype(jnp.int32), jnp.max(sims, 1)
+    return predict_rows(Z[nodes], centroids)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "exclude_self"))
@@ -70,6 +100,53 @@ def _topk_block(vals, idxs, q, block, base, n, qnodes, *,
     return v, jnp.take_along_axis(cat_i, sel, 1)
 
 
+def topk_cosine_q(Zn_rows, q, qnodes, *, k: int = 10,
+                  block_rows: int = 1 << 14, exclude_self: bool = True,
+                  row_offset: int = 0):
+    """Top-k of unit-norm query vectors `q` against the unit-norm
+    candidate rows `Zn_rows`, which live at global indices
+    [row_offset, row_offset + len(Zn_rows)).
+
+    The sharded engine's scatter half: each shard scores the SAME query
+    vectors against its owned slice, results carry global ids, and a
+    per-query ``lax.top_k`` over the concatenated per-shard candidates
+    is exactly the global answer.  `qnodes` are global query node ids
+    for self-exclusion (pass exclude_self=False to keep them).  Returns
+    (indices (q, k) int32, scores (q, k) float32) as numpy."""
+    m = Zn_rows.shape[0]
+    qnodes = jnp.asarray(np.asarray(qnodes, np.int32))
+    nq = q.shape[0]
+    vals = jnp.full((nq, k), -jnp.inf, Zn_rows.dtype)
+    idxs = jnp.full((nq, k), -1, jnp.int32)
+    hi = row_offset + m
+    for base in range(0, m, block_rows):
+        block = Zn_rows[base:min(base + block_rows, m)]
+        if block.shape[0] < block_rows and base > 0:
+            # pad the tail block so the jitted kernel sees one shape
+            pad = block_rows - block.shape[0]
+            block = jnp.pad(block, ((0, pad), (0, 0)))
+        vals, idxs = _topk_block(vals, idxs, q, block, row_offset + base,
+                                 hi, qnodes, exclude_self=exclude_self,
+                                 k=k)
+    # entries never filled (k > candidate count) keep idx -1 / -inf
+    valid = jnp.isfinite(vals)
+    idxs = jnp.where(valid, idxs, -1)
+    return np.asarray(idxs), np.asarray(vals)
+
+
+def merge_topk(idx_parts, val_parts, *, k: int):
+    """Merge per-shard (idx, val) top-k candidate lists into the global
+    top-k (the gather half of the scatter/gather query).  Concatenates
+    along the candidate axis and re-top-ks; unfilled slots (idx -1,
+    -inf) lose to any real candidate."""
+    cat_v = jnp.concatenate([jnp.asarray(v) for v in val_parts], 1)
+    cat_i = jnp.concatenate([jnp.asarray(i) for i in idx_parts], 1)
+    v, sel = jax.lax.top_k(cat_v, k)
+    i = jnp.take_along_axis(cat_i, sel, 1)
+    valid = jnp.isfinite(v)
+    return (np.asarray(jnp.where(valid, i, -1)), np.asarray(v))
+
+
 def topk_cosine(Z, nodes, *, k: int = 10, block_rows: int = 1 << 14,
                 exclude_self: bool = True, pre_normalized: bool = False):
     """Top-k cosine neighbors of Z[nodes] over all rows of Z.
@@ -78,22 +155,8 @@ def topk_cosine(Z, nodes, *, k: int = 10, block_rows: int = 1 << 14,
     service caches `normalize_rows(Z)` per version so repeated queries
     skip the O(n*K) pass).  Returns (indices (q, k) int32,
     scores (q, k) float32) as numpy."""
-    n = Z.shape[0]
-    nodes = jnp.asarray(np.asarray(nodes, np.int32))
+    nodes = np.asarray(nodes, np.int32)
     Zn = Z if pre_normalized else normalize_rows(Z)
-    q = Zn[nodes]
-    nq = q.shape[0]
-    vals = jnp.full((nq, k), -jnp.inf, Z.dtype)
-    idxs = jnp.full((nq, k), -1, jnp.int32)
-    for base in range(0, n, block_rows):
-        block = Zn[base:min(base + block_rows, n)]
-        if block.shape[0] < block_rows and base > 0:
-            # pad the tail block so the jitted kernel sees one shape
-            pad = block_rows - block.shape[0]
-            block = jnp.pad(block, ((0, pad), (0, 0)))
-        vals, idxs = _topk_block(vals, idxs, q, block, base, n, nodes,
-                                 exclude_self=exclude_self, k=k)
-    # entries never filled (k > candidate count) keep idx -1 / -inf
-    valid = jnp.isfinite(vals)
-    idxs = jnp.where(valid, idxs, -1)
-    return np.asarray(idxs), np.asarray(vals)
+    q = Zn[jnp.asarray(nodes)]
+    return topk_cosine_q(Zn, q, nodes, k=k, block_rows=block_rows,
+                         exclude_self=exclude_self)

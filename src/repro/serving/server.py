@@ -1,19 +1,27 @@
 """Serving driver: synthetic SBM workload of mixed reads and writes.
 
-Builds an SBM graph, stands up GraphStore -> EmbeddingService ->
+Builds an SBM graph, stands up GraphStore -> ServingEngine ->
 MicroBatcher, then runs `--steps` workload ticks.  Each tick enqueues a
 mix of reads (embedding gathers, centroid label predictions, top-k
 neighbor lookups) and writes (edge insert batches, deletions of
-previously inserted batches, label reveals), then flushes — so each
-flush exercises read coalescing and write barriers.  Periodic
-compaction restarts the epoch.
+previously inserted batches, label reveals).  With `--sync-flush` the
+driver flushes after each tick; by default the engine's background
+flush loop drains the queue asynchronously (the driver just joins the
+tickets at the end of each tick).  Periodic compaction restarts the
+epoch.
+
+`--shards N` runs the row-partitioned scatter/gather path;
+`--data-dir` makes the engine durable (WAL + snapshots) and finishes
+with a crash-recovery self-check: reopen the deployment from disk and
+verify the exact `(version, epoch, fingerprint)` triple plus Z against
+the live engine.
 
 Exit criteria printed at the end: per-kind throughput/latency stats,
 the version/epoch counters, and a self-check that the delta-maintained
 Z matches a from-scratch rebuild (max |dZ|).
 
     PYTHONPATH=src python -m repro.serving.server --n 2000 --edges 40000 \
-        --steps 30
+        --steps 30 --shards 4
 """
 from __future__ import annotations
 
@@ -25,18 +33,18 @@ from repro.core.gee import gee
 from repro.graph.edges import make_labels
 from repro.graph.generators import sbm
 from repro.serving.batcher import MicroBatcher
-from repro.serving.service import EmbeddingService
+from repro.serving.engine import ServingEngine
 from repro.serving.store import GraphStore
 
 import jax.numpy as jnp
 
 
-def _self_check(service: EmbeddingService) -> float:
+def _self_check(engine: ServingEngine) -> float:
     """Max |delta-maintained Z - from-scratch Z| under epoch labels."""
-    g = service.store.edges()
+    g = engine.store.edges()
     Z = gee(jnp.asarray(g.u), jnp.asarray(g.v), jnp.asarray(g.w),
-            jnp.asarray(service.Y_epoch), K=service.store.K, n=g.n)
-    return float(jnp.max(jnp.abs(Z - service.Z)))
+            jnp.asarray(engine.Y_epoch), K=engine.store.K, n=g.n)
+    return float(jnp.max(jnp.abs(Z - engine.Z)))
 
 
 def main(argv=None):
@@ -45,6 +53,14 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=8, help="communities/classes")
     ap.add_argument("--edges", type=int, default=40_000)
     ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="row-partition Z across N shard workers")
+    ap.add_argument("--data-dir", default=None,
+                    help="durable deployment dir (WAL + snapshots); "
+                         "adds a crash-recovery self-check at the end")
+    ap.add_argument("--sync-flush", action="store_true",
+                    help="flush the batcher inline instead of running "
+                         "the engine's background flush loop")
     ap.add_argument("--reads-per-step", type=int, default=8)
     ap.add_argument("--read-nodes", type=int, default=64)
     ap.add_argument("--write-batch", type=int, default=200)
@@ -60,48 +76,74 @@ def main(argv=None):
     Y = make_labels(args.n, args.k, args.label_frac, rng, true_labels=truth)
 
     store = GraphStore(g, Y, args.k)
-    service = EmbeddingService(store, rebuild_churn=args.rebuild_churn)
-    batcher = MicroBatcher(service, topk=args.topk)
+    engine = ServingEngine(store, num_shards=args.shards,
+                           rebuild_churn=args.rebuild_churn,
+                           data_dir=args.data_dir)
+    batcher = MicroBatcher(engine, topk=args.topk)
+    if not args.sync_flush:
+        engine.start(batcher)
     print(f"[serve-gee] n={args.n} K={args.k} edges={args.edges:,} "
-          f"labeled={int((Y >= 0).sum())}")
+          f"labeled={int((Y >= 0).sum())} shards={args.shards} "
+          f"durable={bool(args.data_dir)}")
 
     inserted: list[tuple] = []     # batches eligible for later deletion
     for step in range(args.steps):
+        tickets = []
         for _ in range(args.reads_per_step):
             kind = rng.choice(["embed", "predict", "topk"])
             nodes = rng.integers(0, args.n, size=args.read_nodes)
-            batcher.submit(str(kind), nodes)
+            tickets.append(batcher.submit(str(kind), nodes))
         b = args.write_batch
         u = rng.integers(0, args.n, size=b).astype(np.int32)
         v = rng.integers(0, args.n, size=b).astype(np.int32)
         w = rng.random(b).astype(np.float32) + 0.5
-        batcher.submit("insert", (u, v, w))
+        tickets.append(batcher.submit("insert", (u, v, w)))
         inserted.append((u, v, w))
         if len(inserted) > 3 and rng.random() < 0.4:
-            batcher.submit("delete",
-                           inserted.pop(rng.integers(0, len(inserted))))
+            tickets.append(batcher.submit(
+                "delete", inserted.pop(rng.integers(0, len(inserted)))))
         if rng.random() < 0.3:
             nodes = rng.integers(0, args.n, size=args.n // 100 + 1)
-            batcher.submit("labels", (nodes, truth[nodes]))
-        batcher.flush()
+            tickets.append(batcher.submit("labels", (nodes, truth[nodes])))
+        if args.sync_flush:
+            batcher.flush()
+        else:                          # async loop drains; join the tick
+            for t in tickets:
+                t.result(timeout=60)
         if args.compact_every and (step + 1) % args.compact_every == 0:
-            info = service.compact()
+            info = (engine.checkpoint() if args.data_dir
+                    else engine.compact())
             print(f"[serve-gee] step {step + 1}: compacted "
                   f"{info['edges_before']:,} -> {info['edges_after']:,} "
-                  f"edges, epoch={service.epoch}")
+                  f"edges, epoch={engine.epoch}")
+    if not args.sync_flush:
+        engine.stop()
 
-    print(f"[serve-gee] final version={service.version} "
-          f"epoch={service.epoch} rebuilds={service.rebuilds} "
-          f"churn={service.churn:.3f}")
+    print(f"[serve-gee] final version={engine.version} "
+          f"epoch={engine.epoch} rebuilds={engine.rebuilds} "
+          f"churn={engine.churn:.3f}")
     for kind, row in batcher.stats().items():
         print(f"[serve-gee] {kind:8s} req={row['requests']:5d} "
               f"batches={row['batches']:4d} "
               f"mean_batch={row['mean_batch']:7.1f} "
               f"lat={row['mean_latency_ms']:8.2f} ms "
               f"thru={row['items_per_s']:10.0f} items/s")
-    err = _self_check(service)
+    err = _self_check(engine)
     print(f"[serve-gee] self-check max|Z_delta - Z_rebuild| = {err:.2e}")
     assert err < 1e-3, "delta-maintained Z diverged from rebuild"
+
+    if args.data_dir:
+        engine.close()
+        recovered = ServingEngine.open(args.data_dir)
+        triple = (engine.version, engine.epoch, engine.fingerprint())
+        rtriple = (recovered.version, recovered.epoch,
+                   recovered.fingerprint())
+        dz = float(jnp.max(jnp.abs(recovered.Z - engine.Z)))
+        print(f"[serve-gee] recovery: {rtriple} vs live {triple}, "
+              f"max|dZ|={dz:.2e}")
+        assert rtriple == triple, "recovered state diverged"
+        assert dz < 1e-3, "recovered Z diverged"
+        recovered.close()
     return err
 
 

@@ -1,152 +1,48 @@
-"""Incrementally maintained GEE embedding over a `GraphStore`.
+"""EmbeddingService — the 1-shard special case of `ServingEngine`.
 
-The service is now a thin epoch/churn policy layer over the unified
-``repro.encoder.Embedder`` (streaming backend): the Embedder owns Z and
-the projection weights Wv, the service owns *when* to rebuild.
+.. deprecated::
+    The serving subsystem's front door is now
+    `repro.serving.ServingEngine`: a deployment with a shard router
+    (Z rows partitioned across `EmbeddingShard` workers), a durable
+    write-ahead delta log with crash recovery, and an async
+    flush/checkpoint loop.  `EmbeddingService` remains as a thin
+    compat shim — exactly `ServingEngine(store, num_shards=1,
+    data_dir=None)` — so existing single-host, volatile callers keep
+    working unchanged.  New code should construct a `ServingEngine`
+    (and pass `data_dir=` to get durability for free).
 
-* **Edge deltas** fold into Z with `Embedder.partial_fit` — O(batch)
-  work, exact by linearity, no epoch change.  The Embedder pads batches
-  to power-of-two buckets (one jit compile per bucket, not per batch
-  size) and always uses the weights Z was built with, closing the old
-  Wv-mismatch footgun of calling `gee_apply_delta` by hand.
-* **Label deltas** change the projection weights W, which touches every
-  edge incident to the affected classes — not expressible as an edge
-  delta.  The service keeps serving the previous epoch's Z (exact for
-  the epoch's labels) and tracks churn vs. the epoch snapshot; once
-  churn exceeds `rebuild_churn` it re-embeds from scratch via
-  `Embedder.fit` and starts a new epoch.
-* **Compaction** rewrites the store's base multiset and always ends in
-  a rebuild, so epochs also advance on compaction.
-* **Cold starts are plan-cache hits.**  The service embeds through a
-  `StoreSource`, and the store maintains the multiset's content
-  fingerprint incrementally — so a fresh replica (or a restart) booting
-  from the same snapshot + delta sequence finds the plan's host half in
-  the persistent cache (`repro.encoder.plan_cache`) and skips host
-  preprocessing entirely.  `plan_cache` plumbs through to the Embedder
-  ("auto" = honor REPRO_PLAN_CACHE; None disables).
-
-Invariant (tested): with no pending label churn, Z equals a
-from-scratch `gee` over the store's live multiset, to float tolerance.
+Everything documented here in earlier revisions — the version/epoch
+model, the delta-vs-rebuild policy, partial_fit exactness by GEE
+linearity, cold starts as plan-cache hits — now lives on the engine
+and applies to every shard count; see `repro.serving.engine`.
 """
 from __future__ import annotations
 
-import numpy as np
+import warnings
 
-from repro.encoder import Embedder, EncoderConfig
-from repro.graph.edges import Graph
-from repro.graph.sources import StoreSource
-from repro.serving import queries as Q
+from repro.serving.engine import ServingEngine
 from repro.serving.store import GraphStore
 
 
-class EmbeddingService:
-    """Serves Z for a live graph; delta-maintains, rebuilds on churn."""
+class EmbeddingService(ServingEngine):
+    """Serves Z for a live graph; delta-maintains, rebuilds on churn.
+
+    Deprecated compat shim: the 1-shard, volatile (no WAL, no
+    snapshots) configuration of :class:`ServingEngine`.  The legacy
+    surface — ``Z``, ``Wv``, ``Y_epoch``, ``embedder``, ``churn``,
+    ``apply_edge_delta`` / ``apply_label_delta``, ``compact`` /
+    ``refresh``, ``centroids`` / ``normalized_Z`` — is the engine's
+    own; nothing is re-implemented here."""
 
     def __init__(self, store: GraphStore, *, rebuild_churn: float = 0.05,
                  chunk_size: int = 1 << 20, backend: str = "streaming",
                  plan_cache="auto"):
-        self.store = store
-        self.source = StoreSource(store)
-        self.rebuild_churn = float(rebuild_churn)
-        self.embedder = Embedder(
-            EncoderConfig(K=store.K, chunk_size=int(chunk_size)),
-            backend=backend, plan_cache=plan_cache)
-        self.epoch = 0
-        self.deltas_applied = 0
-        self.rebuilds = 0
-        self._rebuild()
-
-    # -- epoch state -------------------------------------------------------
-
-    def _rebuild(self) -> None:
-        """Full re-embed under the store's current labels; new epoch."""
-        self.Y_epoch = self.store.Y.copy()
-        self.embedder.fit(self.source, self.Y_epoch)
-        self.version = self.store.version
-        self.epoch += 1
-        self.rebuilds += 1
-        self._invalidate_query_cache()
-
-    @property
-    def Z(self):
-        """The live embedding (owned by the Embedder)."""
-        return self.embedder.Z_
-
-    @property
-    def Wv(self):
-        """Projection weights Z was built with (owned by the Embedder)."""
-        return self.embedder.Wv_
-
-    @property
-    def _Yj(self):
-        return self.embedder._Yj
-
-    def _invalidate_query_cache(self) -> None:
-        """Derived query state (centroids, normalized Z) is a pure
-        function of (Z, epoch labels); drop it whenever either moves."""
-        self._centroids = None
-        self._Zn = None
-
-    def centroids(self):
-        """Class centroids of the current Z, cached until invalidated."""
-        if self._centroids is None:
-            self._centroids = Q.class_centroids(self.Z, self._Yj,
-                                                K=self.store.K)
-        return self._centroids
-
-    def normalized_Z(self):
-        """Row-normalized Z for cosine queries, cached until invalidated."""
-        if self._Zn is None:
-            self._Zn = Q.normalize_rows(self.Z)
-        return self._Zn
-
-    @property
-    def churn(self) -> float:
-        return self.store.churn_fraction(self.Y_epoch)
-
-    @property
-    def stale_labels(self) -> int:
-        return int((self.store.Y != self.Y_epoch).sum())
-
-    def stats(self) -> dict:
-        return {"version": self.version, "epoch": self.epoch,
-                "deltas_applied": self.deltas_applied,
-                "rebuilds": self.rebuilds, "churn": self.churn,
-                "log_edges": self.store.log_edges,
-                "base_edges": self.store.base.s,
-                "fingerprint": self.store.fingerprint(),
-                "plan_stats": dict(self.embedder.plan_stats)}
-
-    # -- writes ------------------------------------------------------------
-
-    def apply_edge_delta(self, u, v, w, *, delete: bool = False) -> int:
-        """Fold an edge batch into store + Z.  O(batch).  Returns version."""
-        version = self.store.apply_edges(u, v, w, delete=delete)
-        batch = Graph(np.asarray(u, np.int32), np.asarray(v, np.int32),
-                      np.asarray(w, np.float32), self.store.n)
-        if batch.s:
-            self.embedder.partial_fit(batch,
-                                      sign=-1.0 if delete else 1.0)
-            self._invalidate_query_cache()
-        self.version = version
-        self.deltas_applied += 1
-        return version
-
-    def apply_label_delta(self, nodes, labels) -> int:
-        """Update labels; rebuild immediately if churn passes threshold,
-        otherwise keep serving the current epoch's Z."""
-        version = self.store.apply_labels(nodes, labels)
-        self.version = version
-        if self.churn > self.rebuild_churn:
-            self._rebuild()
-        return version
-
-    def compact(self) -> dict:
-        """Compact the store and start a fresh epoch."""
-        info = self.store.compact()
-        self._rebuild()
-        return info
-
-    def refresh(self) -> None:
-        """Force a rebuild (e.g. to pick up sub-threshold label churn)."""
-        self._rebuild()
+        warnings.warn(
+            "EmbeddingService is deprecated: construct "
+            "repro.serving.ServingEngine (this shim is exactly "
+            "ServingEngine(store, num_shards=1, data_dir=None))",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(store, data_dir=None, num_shards=1,
+                         rebuild_churn=rebuild_churn,
+                         chunk_size=chunk_size, backend=backend,
+                         plan_cache=plan_cache)

@@ -65,6 +65,7 @@ class GraphStore:
         self.compactions = 0
         self.edge_log: list[EdgeDelta] = []
         self._fp = self.base.fingerprint()     # hashed once, then chained
+        self._coalesced = False    # base known duplicate-free? (compact)
 
     # -- delta application ------------------------------------------------
 
@@ -137,7 +138,16 @@ class GraphStore:
         """Fold the log into the base: coalesce duplicate (u, v) keys,
         sum weights, drop ~zero entries.  Logical content is unchanged
         (GEE is linear, so coalescing parallel edges is exact); the
-        version counter is NOT bumped."""
+        version counter is NOT bumped.
+
+        A no-op compaction (empty log over an already-coalesced base —
+        e.g. a snapshot right after a compact, the engine's checkpoint
+        path) returns early: no O(s log s) re-sort, no fp rehash, no
+        base rewrite."""
+        if not self.edge_log and self._coalesced:
+            return {"edges_before": self.base.s,
+                    "edges_after": self.base.s,
+                    "compactions": self.compactions}
         g = self.edges()
         before = g.s
         key = g.u.astype(np.int64) * g.n + g.v
@@ -154,6 +164,7 @@ class GraphStore:
         # depend on the physical edge list, so the identity SHOULD move)
         self._fp = self.base.fingerprint()
         self.compactions += 1
+        self._coalesced = True
         return {"edges_before": before, "edges_after": self.base.s,
                 "compactions": self.compactions}
 
@@ -176,4 +187,5 @@ class GraphStore:
         store = cls(g, meta["Y"], int(meta["K"]))
         store.version = int(meta["version"])
         store.compactions = int(meta["compactions"])
+        store._coalesced = True        # snapshots are written compacted
         return store

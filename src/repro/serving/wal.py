@@ -1,0 +1,206 @@
+"""Durable write-ahead delta log for the serving engine.
+
+The `GraphStore`'s in-memory delta log dies with the process; the WAL
+is its durable twin.  Every mutation the engine accepts is appended
+here BEFORE it is applied (append-before-apply), so a crashed engine
+can be reconstructed exactly: load the last snapshot, replay the WAL
+suffix, and the recovered `(version, epoch, fingerprint)` triple — and
+the rebuilt Z — match the crashed process (tested).
+
+Record kinds mirror the engine's write surface:
+
+  EDGES    an edge batch with sign-folded weights (deletions carry
+           negative w, exactly as the store logs them);
+  LABELS   a label point-update (nodes, labels);
+  COMPACT  a compaction marker — compaction is a deterministic pure
+           function of store state, so replaying the marker reproduces
+           the coalesced base (and its rehashed fingerprint);
+  REBUILD  an explicit rebuild (``refresh()``), which advances the
+           epoch without changing the multiset.
+
+On-disk format (version-stamped file header, then records):
+
+    [u32 payload_len][u32 crc32(payload)][payload]
+    payload = [u8 kind][u64 version][u64 count][column bytes...]
+
+Appends are flushed per record, so the log survives process death
+(the crash-recovery contract).  ``fsync=True`` additionally fsyncs
+every append for power-failure durability at a latency cost.  A torn
+tail — a crash mid-append — is detected by length/CRC and truncated on
+open: the WAL can lose at most the record being written, never parse
+garbage into the store.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+_FILE_MAGIC = b"REPROWAL1\n"
+_HEADER = struct.Struct("<II")          # payload_len, crc32
+_PREFIX = struct.Struct("<BQQ")         # kind, version, count
+
+EDGES, LABELS, COMPACT, REBUILD = 1, 2, 3, 4
+_MARKERS = (COMPACT, REBUILD)
+
+
+@dataclass(frozen=True)
+class WalRecord:
+    """One replayable mutation.  For EDGES, `a, b, c` are (u, v, w)
+    with w sign-folded; for LABELS they are (nodes, labels, None);
+    markers carry no arrays."""
+    kind: int
+    version: int
+    a: Optional[np.ndarray] = None
+    b: Optional[np.ndarray] = None
+    c: Optional[np.ndarray] = None
+
+
+def _encode(rec: WalRecord) -> bytes:
+    if rec.kind == EDGES:
+        u = np.ascontiguousarray(rec.a, np.int32)
+        v = np.ascontiguousarray(rec.b, np.int32)
+        w = np.ascontiguousarray(rec.c, np.float32)
+        count = u.shape[0]
+        cols = u.tobytes() + v.tobytes() + w.tobytes()
+    elif rec.kind == LABELS:
+        nodes = np.ascontiguousarray(rec.a, np.int64)
+        labels = np.ascontiguousarray(rec.b, np.int32)
+        count = nodes.shape[0]
+        cols = nodes.tobytes() + labels.tobytes()
+    elif rec.kind in _MARKERS:
+        count, cols = 0, b""
+    else:
+        raise ValueError(f"unknown WAL record kind {rec.kind}")
+    return _PREFIX.pack(rec.kind, rec.version, count) + cols
+
+
+def _decode(payload: bytes) -> WalRecord:
+    kind, version, count = _PREFIX.unpack_from(payload)
+    body = payload[_PREFIX.size:]
+    if kind == EDGES:
+        expect = count * (4 + 4 + 4)
+        if len(body) != expect:
+            raise ValueError("EDGES record length mismatch")
+        u = np.frombuffer(body[:4 * count], np.int32)
+        v = np.frombuffer(body[4 * count:8 * count], np.int32)
+        w = np.frombuffer(body[8 * count:], np.float32)
+        return WalRecord(kind, version, u, v, w)
+    if kind == LABELS:
+        expect = count * (8 + 4)
+        if len(body) != expect:
+            raise ValueError("LABELS record length mismatch")
+        nodes = np.frombuffer(body[:8 * count], np.int64)
+        labels = np.frombuffer(body[8 * count:], np.int32)
+        return WalRecord(kind, version, nodes, labels)
+    if kind in _MARKERS and not body:
+        return WalRecord(kind, version)
+    raise ValueError(f"unknown WAL record kind {kind}")
+
+
+def _scan_valid(path: str) -> tuple[list[WalRecord], int]:
+    """Parse records up to the first torn/corrupt one.
+
+    Returns (records, valid_byte_length).  Standard WAL semantics: a
+    crash mid-append leaves a torn tail, which reads as end-of-log."""
+    records: list[WalRecord] = []
+    with open(path, "rb") as f:
+        magic = f.read(len(_FILE_MAGIC))
+        if magic != _FILE_MAGIC:
+            return [], 0 if len(magic) < len(_FILE_MAGIC) else -1
+        good = f.tell()
+        while True:
+            header = f.read(_HEADER.size)
+            if len(header) < _HEADER.size:
+                break
+            length, crc = _HEADER.unpack(header)
+            payload = f.read(length)
+            if len(payload) < length or zlib.crc32(payload) != crc:
+                break
+            try:
+                records.append(_decode(payload))
+            except ValueError:
+                break
+            good = f.tell()
+    return records, good
+
+
+class WriteAheadLog:
+    """Append-only durable delta log (single writer).
+
+    ``open()`` scans the file, truncates any torn tail, and returns the
+    valid records so the engine can replay them; subsequent ``append_*``
+    calls extend the same file.  A missing file is created empty."""
+
+    def __init__(self, path: str, *, fsync: bool = False):
+        self.path = str(path)
+        self.fsync = bool(fsync)
+        self.records_appended = 0
+        self._f: Optional[object] = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def open(self) -> list[WalRecord]:
+        """Open for append; returns the existing valid records."""
+        records: list[WalRecord] = []
+        if os.path.exists(self.path):
+            records, good = _scan_valid(self.path)
+            if good < 0:
+                raise ValueError(f"{self.path} is not a WAL file")
+            if good < os.path.getsize(self.path):
+                with open(self.path, "r+b") as f:  # torn tail: drop it
+                    f.truncate(good)
+        self._f = open(self.path, "ab")
+        if self._f.tell() == 0:
+            self._f.write(_FILE_MAGIC)
+            self._f.flush()
+        return records
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    @property
+    def bytes_written(self) -> int:
+        """Current file length (the checkpoint-trigger signal)."""
+        if self._f is not None:
+            return self._f.tell()
+        return os.path.getsize(self.path) if os.path.exists(self.path) \
+            else 0
+
+    # -- appends (append-before-apply: callers write here FIRST) ----------
+
+    def _append(self, rec: WalRecord) -> None:
+        if self._f is None:
+            raise RuntimeError("WAL not open")
+        payload = _encode(rec)
+        self._f.write(_HEADER.pack(len(payload), zlib.crc32(payload)))
+        self._f.write(payload)
+        self._f.flush()                 # survives process death
+        if self.fsync:                  # survives power loss
+            os.fsync(self._f.fileno())
+        self.records_appended += 1
+
+    def append_edges(self, version: int, u, v, w) -> None:
+        """w must already be sign-folded (deletions negative)."""
+        self._append(WalRecord(EDGES, version, u, v, w))
+
+    def append_labels(self, version: int, nodes, labels) -> None:
+        self._append(WalRecord(LABELS, version, nodes, labels))
+
+    def append_marker(self, kind: int, version: int) -> None:
+        assert kind in _MARKERS, kind
+        self._append(WalRecord(kind, version))
+
+
+def read_wal(path: str) -> Iterator[WalRecord]:
+    """Read-only replay of a WAL file (torn tail treated as EOF)."""
+    records, good = _scan_valid(path)
+    if good < 0:
+        raise ValueError(f"{path} is not a WAL file")
+    return iter(records)

@@ -175,3 +175,110 @@ def test_default_cache_env_resolution(monkeypatch, tmp_path):
     monkeypatch.delenv("REPRO_PLAN_CACHE")
     monkeypatch.setenv("XDG_CACHE_HOME", str(tmp_path / "xdg"))
     assert default_cache().root == tmp_path / "xdg" / "repro-gee" / "plans"
+
+
+def _fake_entry(cache: PlanDiskCache, i: int, mtime: float,
+                nbytes: int = 64) -> Path:
+    """A raw npz entry with a controlled last_used time and size."""
+    cache.root.mkdir(parents=True, exist_ok=True)
+    path = cache.root / f"{i:032x}.npz"
+    np.savez(path, blob=np.zeros(max(1, nbytes // 8), np.int64))
+    os.utime(path, (mtime, mtime))
+    return path
+
+
+class TestLruEviction:
+    def test_max_entries_evicts_least_recently_used(self, tmp_path):
+        cache = PlanDiskCache(tmp_path, max_entries=2)
+        paths = [_fake_entry(cache, i, mtime=1000.0 + i)
+                 for i in range(4)]
+        assert cache.evict() == 2
+        assert not paths[0].exists() and not paths[1].exists()
+        assert paths[2].exists() and paths[3].exists()
+
+    def test_max_bytes_evicts_until_under_budget(self, tmp_path):
+        cache = PlanDiskCache(tmp_path, max_bytes=1)
+        a = _fake_entry(cache, 0, mtime=1000.0)
+        b = _fake_entry(cache, 1, mtime=2000.0)
+        assert cache.evict() >= 1
+        assert not a.exists()           # oldest went first
+        # a single entry can still exceed a tiny budget — it goes too
+        assert cache.evict() == (1 if b.exists() else 0)
+
+    def test_store_triggers_eviction_and_hits_touch(self, tmp_path):
+        g = erdos_renyi(60, 300, seed=0, weighted=True)
+        Y = make_labels(60, 3, 0.4, np.random.default_rng(0))
+        cache = PlanDiskCache(tmp_path, max_entries=2)
+        # three distinct configs -> three entries through the real
+        # store path; the cap holds after every store
+        for K in (3, 4, 5):
+            Embedder(EncoderConfig(K=K, **CFG), backend="pallas",
+                     plan_cache=cache).fit(
+                         g, np.minimum(Y, K - 1).astype(np.int32))
+            assert len(cache.entries()) <= 2
+        # a LOAD refreshes recency: back-date both survivors, hit one,
+        # then overflow — the un-hit entry is the eviction victim
+        survivors = cache.entries()
+        for p in survivors:
+            os.utime(p, (1000.0, 1000.0))
+        emb = Embedder(EncoderConfig(K=5, **CFG), backend="pallas",
+                       plan_cache=cache)
+        emb.fit(g, np.minimum(Y, 4).astype(np.int32))
+        assert emb.plan_stats["disk_hits"] == 1
+        hit_path = [p for p in cache.entries()
+                    if p.stat().st_mtime > 1500.0]
+        assert len(hit_path) == 1
+        _fake_entry(cache, 99, mtime=3000.0)
+        cache.evict()
+        assert hit_path[0].exists()     # recently used: kept
+
+    def test_unbounded_cache_never_evicts(self, tmp_path):
+        cache = PlanDiskCache(tmp_path)
+        for i in range(5):
+            _fake_entry(cache, i, mtime=1000.0 + i)
+        assert cache.evict() == 0
+        assert len(cache.entries()) == 5
+
+    def test_default_cache_reads_limit_env(self, monkeypatch, tmp_path):
+        monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path))
+        monkeypatch.setenv("REPRO_PLAN_CACHE_MAX_ENTRIES", "7")
+        monkeypatch.setenv("REPRO_PLAN_CACHE_MAX_BYTES", "1048576")
+        cache = default_cache()
+        assert (cache.max_entries, cache.max_bytes) == (7, 1048576)
+        monkeypatch.setenv("REPRO_PLAN_CACHE_MAX_ENTRIES", "junk")
+        monkeypatch.setenv("REPRO_PLAN_CACHE_MAX_BYTES", "0")
+        cache = default_cache()
+        assert (cache.max_entries, cache.max_bytes) == (None, None)
+
+
+class TestCli:
+    def test_stats_and_clear(self, tmp_path, capsys):
+        from repro.encoder.plan_cache import main
+        cache = PlanDiskCache(tmp_path)
+        for i in range(3):
+            _fake_entry(cache, i, mtime=1000.0 + i)
+        assert main(["--dir", str(tmp_path), "--stats"]) == 0
+        out = capsys.readouterr().out
+        assert "entries:     3" in out
+        assert main(["--dir", str(tmp_path), "--clear"]) == 0
+        out = capsys.readouterr().out
+        assert "cleared 3" in out
+        assert cache.entries() == []
+
+    def test_disabled_cache_reports_and_fails(self, monkeypatch, capsys):
+        from repro.encoder.plan_cache import main
+        monkeypatch.setenv("REPRO_PLAN_CACHE", "off")
+        assert main(["--stats"]) == 1
+        assert "disabled" in capsys.readouterr().out
+
+    def test_module_entrypoint_runs(self, tmp_path):
+        env = dict(os.environ)
+        src_root = str(Path(next(iter(repro.__path__))).resolve().parent)
+        env["PYTHONPATH"] = (src_root + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.encoder.plan_cache",
+             "--dir", str(tmp_path), "--stats"],
+            env=env, capture_output=True, text=True, timeout=120)
+        assert out.returncode == 0, out.stderr
+        assert "entries:     0" in out.stdout

@@ -282,3 +282,73 @@ class TestBatcher:
         assert st["embed"]["errors"] == 1
         assert st["insert"]["errors"] == 1
         assert st["embed"]["items_per_s"] > 0
+
+    def test_interleaved_kinds_keep_barrier_order(self):
+        """Barrier ordering with every read kind interleaved between
+        writes: each read window observes exactly the version produced
+        by the writes before it, and writes apply in submission order."""
+        rng = np.random.default_rng(43)
+        g, truth = sbm(200, 4, 3000, p_in=0.9, seed=43)
+        Y = make_labels(200, 4, 0.3, np.random.default_rng(43),
+                        true_labels=truth)
+        service = EmbeddingService(GraphStore(g, Y, 4))
+        batcher = MicroBatcher(service, topk=3, topk_block_rows=64)
+        r0 = batcher.submit("embed", np.array([1, 2]))
+        w0 = batcher.submit("insert", _rand_batch(rng, 200, 10))
+        r1a = batcher.submit("predict", np.array([3]))
+        r1b = batcher.submit("topk", np.array([4]))
+        w1 = batcher.submit("labels", (np.array([0]), truth[:1]))
+        w2 = batcher.submit("delete", _rand_batch(rng, 200, 5))
+        r3 = batcher.submit("embed", np.array([5]))
+        assert batcher.flush() == 7
+        assert r0.version == 0
+        assert w0.result() == 1
+        assert {r1a.version, r1b.version} == {1}
+        assert (w1.result(), w2.result()) == (2, 3)
+        assert r3.version == 3
+        # reads between two writes form ONE window: one batch per kind
+        st = batcher.stats()
+        assert st["predict"]["batches"] == 1
+        assert st["topk"]["batches"] == 1
+        assert st["embed"]["batches"] == 2      # split by the barrier
+
+    def test_empty_flush_is_a_noop(self):
+        g, Y = _setup(seed=47)
+        batcher = MicroBatcher(EmbeddingService(GraphStore(g, Y, 5)))
+        assert batcher.flush() == 0
+        assert batcher.pending() == 0
+        assert batcher.stats() == {}            # no phantom kinds
+
+    def test_stats_after_exception_in_read_handler(self, monkeypatch):
+        """A kernel-side failure (not a bad request) fails every ticket
+        in the coalesced batch, counts one batch with zero items, and
+        leaves the batcher serviceable."""
+        g, Y = _setup(seed=53)
+        service = EmbeddingService(GraphStore(g, Y, 5))
+        batcher = MicroBatcher(service)
+        boom = RuntimeError("kernel exploded")
+
+        def broken(nodes, **kw):
+            raise boom
+        monkeypatch.setattr(service, "query_topk", broken)
+        t1 = batcher.submit("topk", np.array([1]))
+        t2 = batcher.submit("topk", np.array([2, 3]))
+        ok = batcher.submit("embed", np.array([4]))
+        assert batcher.flush() == 3
+        for t in (t1, t2):
+            with pytest.raises(RuntimeError):
+                t.result(timeout=1)
+        assert ok.result(timeout=1).shape == (1, 5)
+        st = batcher.stats()
+        assert st["topk"]["errors"] == 2
+        assert st["topk"]["batches"] == 1
+        assert st["topk"]["items"] == 0
+        assert st["topk"]["items_per_s"] == 0.0
+        assert st["embed"]["errors"] == 0
+        # the failure poisoned nothing: the next flush serves normally
+        monkeypatch.undo()
+        t3 = batcher.submit("topk", np.array([1]))
+        batcher.flush()
+        idx, val = t3.result(timeout=1)
+        assert idx.shape == (1, batcher.topk) and 1 not in idx[0]
+        assert batcher.stats()["topk"]["batches"] == 2

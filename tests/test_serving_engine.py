@@ -1,0 +1,428 @@
+"""Sharded serving engine: row-partition routing, WAL durability and
+crash recovery (the acceptance contract: replaying WAL onto the last
+snapshot reconstructs the exact (version, epoch, fingerprint) state and
+a Z equal to a fresh `gee_streaming` rebuild), sharded scatter/gather
+query equivalence for N in {1, 2, 4}, and the async flush loop."""
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gee import gee_streaming
+from repro.graph.edges import make_labels
+from repro.graph.generators import erdos_renyi
+from repro.graph.partition import RowPartition
+from repro.serving import (GraphStore, MicroBatcher, ServingEngine,
+                           WriteAheadLog)
+from repro.serving import wal as W
+
+
+def _mkstore(n=240, s=2400, K=5, seed=0, frac=0.4):
+    g = erdos_renyi(n, s, seed=seed, weighted=True)
+    Y = make_labels(n, K, frac, np.random.default_rng(seed))
+    return GraphStore(g, Y, K)
+
+
+def _rand_batch(rng, n, b):
+    return (rng.integers(0, n, b).astype(np.int32),
+            rng.integers(0, n, b).astype(np.int32),
+            (rng.random(b, dtype=np.float32) + 0.5))
+
+
+class TestRowPartition:
+    @pytest.mark.parametrize("n,p", [(10, 1), (10, 3), (100, 4),
+                                     (101, 4), (7, 7)])
+    def test_slices_cover_and_agree_with_shard_of(self, n, p):
+        part = RowPartition(n, p)
+        seen = np.zeros(n, bool)
+        for shard in range(p):
+            lo, hi = part.slice(shard)
+            assert not seen[lo:hi].any()
+            seen[lo:hi] = True
+            if hi > lo:
+                ids = np.arange(lo, hi)
+                np.testing.assert_array_equal(part.shard_of(ids), shard)
+        assert seen.all()
+
+    def test_invalid_partitions_raise(self):
+        with pytest.raises(ValueError):
+            RowPartition(10, 0)
+        with pytest.raises(ValueError):
+            RowPartition(3, 5)
+        with pytest.raises(ValueError):   # ceil stride empties shard 4
+            RowPartition(8, 5)
+
+    def test_route_edges_fans_out_to_owners_once(self):
+        rng = np.random.default_rng(1)
+        n, s, p = 50, 400, 3
+        u = rng.integers(0, n, s).astype(np.int32)
+        v = rng.integers(0, n, s).astype(np.int32)
+        w = rng.random(s).astype(np.float32)
+        part = RowPartition(n, p)
+        su, sv = part.shard_of(u), part.shard_of(v)
+        routed = dict(part.route_edges(u, v, w))
+        # shard i holds exactly the edges with an endpoint in its rows
+        for i in range(p):
+            want = (su == i) | (sv == i)
+            got = routed.get(i)
+            assert got is not None and got[0].shape[0] == want.sum()
+            np.testing.assert_array_equal(got[0], u[want])  # order kept
+            np.testing.assert_array_equal(got[2], w[want])
+        # total copies = 1 for intra-shard edges, 2 for crossing ones
+        total = sum(g[0].shape[0] for g in routed.values())
+        assert total == s + (su != sv).sum()
+
+    def test_route_nodes_reassembles_in_request_order(self):
+        part = RowPartition(30, 3)
+        nodes = np.array([29, 0, 15, 1, 29, 10], np.int32)
+        out = np.full(nodes.shape[0], -1, np.int64)
+        for shard, idx in part.route_nodes(nodes):
+            lo, hi = part.slice(shard)
+            assert ((nodes[idx] >= lo) & (nodes[idx] < hi)).all()
+            out[idx] = nodes[idx]
+        np.testing.assert_array_equal(out, nodes)
+
+
+class TestWal:
+    def test_roundtrip(self, tmp_path):
+        path = str(tmp_path / "w.log")
+        wal = WriteAheadLog(path)
+        assert wal.open() == []
+        wal.append_edges(1, np.array([1, 2], np.int32),
+                         np.array([3, 4], np.int32),
+                         np.array([0.5, -1.5], np.float32))
+        wal.append_labels(2, np.array([7], np.int64),
+                          np.array([0], np.int32))
+        wal.append_marker(W.COMPACT, 2)
+        wal.append_edges(3, np.zeros(0, np.int32), np.zeros(0, np.int32),
+                         np.zeros(0, np.float32))   # empty batches legal
+        wal.close()
+        recs = list(W.read_wal(path))
+        assert [r.kind for r in recs] == [W.EDGES, W.LABELS, W.COMPACT,
+                                          W.EDGES]
+        assert [r.version for r in recs] == [1, 2, 2, 3]
+        np.testing.assert_array_equal(recs[0].a, [1, 2])
+        np.testing.assert_allclose(recs[0].c, [0.5, -1.5])
+        np.testing.assert_array_equal(recs[1].a, [7])
+        assert recs[3].a.shape == (0,)
+
+    def test_torn_tail_is_truncated_and_appendable(self, tmp_path):
+        path = str(tmp_path / "w.log")
+        wal = WriteAheadLog(path)
+        wal.open()
+        wal.append_marker(W.REBUILD, 1)
+        wal.append_marker(W.REBUILD, 2)
+        wal.close()
+        good_size = os.path.getsize(path)
+        with open(path, "ab") as f:      # crash mid-append
+            f.write(b"\x13\x00\x00\x00garbage")
+        wal2 = WriteAheadLog(path)
+        recs = wal2.open()
+        assert [r.version for r in recs] == [1, 2]
+        assert os.path.getsize(path) == good_size
+        wal2.append_marker(W.REBUILD, 3)
+        wal2.close()
+        assert [r.version for r in W.read_wal(path)] == [1, 2, 3]
+
+    def test_corrupt_record_stops_replay(self, tmp_path):
+        path = str(tmp_path / "w.log")
+        wal = WriteAheadLog(path)
+        wal.open()
+        wal.append_edges(1, np.arange(8, dtype=np.int32),
+                         np.arange(8, dtype=np.int32),
+                         np.ones(8, np.float32))
+        first_end = wal.bytes_written
+        wal.append_marker(W.REBUILD, 2)
+        wal.close()
+        with open(path, "r+b") as f:     # flip a byte inside record 1
+            f.seek(first_end - 5)
+            b = f.read(1)
+            f.seek(first_end - 5)
+            f.write(bytes([b[0] ^ 0xFF]))
+        recs = list(W.read_wal(path))
+        assert recs == []                # CRC catches it; tail dropped
+
+    def test_not_a_wal_raises(self, tmp_path):
+        path = tmp_path / "w.log"
+        path.write_bytes(b"definitely-not-a-wal-file-here")
+        with pytest.raises(ValueError):
+            WriteAheadLog(str(path)).open()
+
+
+def _assert_topk_equiv(idx_a, val_a, idx_b, val_b, atol=1e-5):
+    """Top-k equality modulo ties: scores must match; where indices
+    differ, the corresponding scores must be within tolerance."""
+    np.testing.assert_allclose(val_a, val_b, atol=atol)
+    diff = idx_a != idx_b
+    if diff.any():
+        np.testing.assert_allclose(val_a[diff], val_b[diff], atol=atol)
+
+
+class TestShardedEquivalence:
+    """Acceptance: sharded scatter/gather answers for N in {1, 2, 4}
+    equal the single-shard answers on randomized graphs."""
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_queries_match_single_shard(self, seed):
+        rng = np.random.default_rng(100 + seed)
+        engines = {p: ServingEngine(_mkstore(seed=seed), num_shards=p)
+                   for p in (1, 2, 4)}
+        # mutate every deployment identically: inserts, deletes, labels
+        for step in range(4):
+            batch = _rand_batch(np.random.default_rng(7 * seed + step),
+                                240, 60 + step)
+            for e in engines.values():
+                e.apply_edge_delta(*batch)
+            if step == 2:
+                for e in engines.values():
+                    e.apply_edge_delta(*batch, delete=True)
+        nodes = rng.integers(0, 240, 50).astype(np.int32)
+        ref = engines[1]
+        rows_ref = ref.query_embed(nodes)
+        pred_ref, score_ref = ref.query_predict(nodes)
+        idx_ref, val_ref = ref.query_topk(nodes, k=7, block_rows=32)
+        for p in (2, 4):
+            e = engines[p]
+            assert e.stats()["num_shards"] == p
+            np.testing.assert_allclose(e.query_embed(nodes), rows_ref,
+                                       atol=1e-5)
+            np.testing.assert_allclose(np.asarray(e.Z),
+                                       np.asarray(ref.Z), atol=1e-5)
+            pred, score = e.query_predict(nodes)
+            np.testing.assert_array_equal(pred, pred_ref)
+            np.testing.assert_allclose(score, score_ref, atol=1e-5)
+            idx, val = e.query_topk(nodes, k=7, block_rows=32)
+            _assert_topk_equiv(idx, val, idx_ref, val_ref)
+
+    def test_rebuild_on_label_churn_stays_equivalent(self):
+        truth = np.random.default_rng(3).integers(0, 5, 240,
+                                                  dtype=np.int32)
+        engines = {p: ServingEngine(_mkstore(seed=3), num_shards=p,
+                                    rebuild_churn=0.1)
+                   for p in (1, 2, 4)}
+        many = np.arange(240 // 3)
+        for e in engines.values():
+            e.apply_label_delta(many, truth[many])
+            assert e.epoch == 2           # threshold crossed everywhere
+        ref = np.asarray(engines[1].Z)
+        for p in (2, 4):
+            np.testing.assert_allclose(np.asarray(engines[p].Z), ref,
+                                       atol=1e-5)
+
+    def test_topk_self_exclusion_across_shards(self):
+        eng = ServingEngine(_mkstore(seed=5), num_shards=4)
+        nodes = np.arange(0, 240, 17, dtype=np.int32)
+        idx, _ = eng.query_topk(nodes, k=6, block_rows=64)
+        for i, q in enumerate(nodes):
+            assert q not in idx[i]
+
+    def test_batcher_runs_over_sharded_engine(self):
+        rng = np.random.default_rng(11)
+        eng = ServingEngine(_mkstore(seed=11), num_shards=3)
+        mb = MicroBatcher(eng, topk=4, topk_block_rows=64)
+        pre = mb.submit("embed", rng.integers(0, 240, 8))
+        wt = mb.submit("insert", _rand_batch(rng, 240, 20))
+        post = mb.submit("embed", rng.integers(0, 240, 8))
+        assert mb.flush() == 3
+        assert pre.version == 0 and wt.result() == 1
+        assert post.version == 1
+        np.testing.assert_allclose(
+            post.result(), np.asarray(eng.Z)[np.asarray(post.payload)],
+            atol=1e-6)
+
+
+class TestCrashRecovery:
+    """Acceptance: kill an engine mid-stream after K applied deltas,
+    restart from WAL+snapshot, and the recovered Z equals a fresh
+    `gee_streaming` rebuild of the same edge multiset, with exact
+    (version, epoch, fingerprint) match."""
+
+    @pytest.mark.parametrize("num_shards", [1, 2])
+    def test_recovery_reconstructs_exact_state(self, tmp_path,
+                                               num_shards):
+        rng = np.random.default_rng(40 + num_shards)
+        truth = rng.integers(0, 5, 240, dtype=np.int32)
+        eng = ServingEngine(_mkstore(seed=8), num_shards=num_shards,
+                            data_dir=str(tmp_path / "dep"),
+                            rebuild_churn=0.1)
+        inserted = []
+        for step in range(8):            # K applied deltas mid-stream
+            if step % 3 == 2 and inserted:
+                eng.apply_edge_delta(*inserted.pop(), delete=True)
+            else:
+                batch = _rand_batch(rng, 240, int(rng.integers(1, 90)))
+                eng.apply_edge_delta(*batch)
+                inserted.append(batch)
+        few = rng.choice(240, 10, replace=False)     # below threshold
+        eng.apply_label_delta(few, truth[few])
+        many = rng.choice(240, 120, replace=False)   # forces a rebuild
+        eng.apply_label_delta(many, truth[many])
+        assert eng.epoch > 1 and eng.stale_labels >= 0
+        triple = (eng.version, eng.epoch, eng.fingerprint())
+        Z_live = np.asarray(eng.Z)
+        # crash: the engine object is abandoned without close/checkpoint
+        rec = ServingEngine.open(str(tmp_path / "dep"))
+        assert rec.num_shards == num_shards
+        assert (rec.version, rec.epoch, rec.fingerprint()) == triple
+        np.testing.assert_array_equal(rec.Y_epoch, eng.Y_epoch)
+        np.testing.assert_array_equal(rec.store.Y, eng.store.Y)
+        # recovered Z == fresh gee_streaming rebuild of the multiset
+        g = rec.store.edges()
+        Z_ref = gee_streaming([(jnp.asarray(g.u), jnp.asarray(g.v),
+                                jnp.asarray(g.w))],
+                              jnp.asarray(rec.Y_epoch), K=5, n=g.n)
+        np.testing.assert_allclose(np.asarray(rec.Z), np.asarray(Z_ref),
+                                   atol=1e-5)
+        # ... and tracks the crashed process's delta-maintained Z
+        np.testing.assert_allclose(np.asarray(rec.Z), Z_live, atol=1e-3)
+        rec.close()
+
+    def test_checkpoint_rotates_generation_and_recovers(self, tmp_path):
+        d = str(tmp_path / "dep")
+        rng = np.random.default_rng(77)
+        eng = ServingEngine(_mkstore(seed=9), num_shards=2, data_dir=d)
+        eng.apply_edge_delta(*_rand_batch(rng, 240, 50))
+        info = eng.checkpoint()
+        assert info["generation"] == 1 and eng.checkpoints == 1
+        assert eng.wal.records_appended == 0     # rotated
+        assert not os.path.exists(os.path.join(d, "wal-0.log"))
+        eng.apply_edge_delta(*_rand_batch(rng, 240, 30))
+        triple = (eng.version, eng.epoch, eng.fingerprint())
+        rec = ServingEngine.open(d)              # crash after checkpoint
+        assert rec.generation == 1 and rec.checkpoints == 1
+        assert (rec.version, rec.epoch, rec.fingerprint()) == triple
+        rec.close()
+
+    def test_compact_and_refresh_markers_replay(self, tmp_path):
+        d = str(tmp_path / "dep")
+        rng = np.random.default_rng(13)
+        eng = ServingEngine(_mkstore(seed=13), data_dir=d)
+        eng.apply_edge_delta(*_rand_batch(rng, 240, 40))
+        eng.compact()                    # volatile compaction, marker
+        eng.refresh()                    # explicit rebuild, marker
+        eng.apply_edge_delta(*_rand_batch(rng, 240, 20))
+        triple = (eng.version, eng.epoch, eng.fingerprint())
+        rec = ServingEngine.open(d)
+        assert (rec.version, rec.epoch, rec.fingerprint()) == triple
+        assert rec.rebuilds == eng.rebuilds
+        rec.close()
+
+    def test_torn_wal_tail_recovers_prefix(self, tmp_path):
+        d = str(tmp_path / "dep")
+        eng = ServingEngine(_mkstore(seed=21), data_dir=d)
+        rng = np.random.default_rng(21)
+        eng.apply_edge_delta(*_rand_batch(rng, 240, 25))
+        triple = (eng.version, eng.epoch, eng.fingerprint())
+        wal_path = os.path.join(d, "wal-0.log")
+        with open(wal_path, "ab") as f:  # crash mid-append of the next
+            f.write(b"\xff\xff\x00\x00torn")
+        rec = ServingEngine.open(d)
+        assert (rec.version, rec.epoch, rec.fingerprint()) == triple
+        rec.close()
+
+    def test_existing_deployment_refuses_fresh_init(self, tmp_path):
+        d = str(tmp_path / "dep")
+        ServingEngine(_mkstore(), data_dir=d).close()
+        with pytest.raises(FileExistsError):
+            ServingEngine(_mkstore(), data_dir=d)
+
+    def test_open_missing_deployment_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            ServingEngine.open(str(tmp_path / "nope"))
+
+    def test_recovered_replica_shares_plan_cache(self, tmp_path):
+        """A recovered sharded engine's rebuild must be a persistent
+        plan-cache hit: the chained per-shard fingerprints replay to
+        the same values the crashed process stored under."""
+        d = str(tmp_path / "dep")
+        cache = str(tmp_path / "plans")
+        rng = np.random.default_rng(31)
+        eng = ServingEngine(_mkstore(seed=31), num_shards=2,
+                            data_dir=d, plan_cache=cache)
+        eng.apply_edge_delta(*_rand_batch(rng, 240, 30))
+        eng.refresh()                    # store entries for the live
+        stats = eng.stats()["plan_stats"]   # multiset's routed halves
+        assert stats["disk_stores"] >= 2
+        rec = ServingEngine.open(d, plan_cache=cache)
+        rstats = rec.stats()["plan_stats"]
+        assert rstats["disk_hits"] == 2 and rstats["built"] == 0
+        np.testing.assert_allclose(np.asarray(rec.Z),
+                                   np.asarray(eng.Z), atol=1e-5)
+        rec.close()
+
+
+class TestAsyncLoop:
+    def test_background_flush_serves_submitters(self):
+        rng = np.random.default_rng(55)
+        eng = ServingEngine(_mkstore(seed=55), num_shards=2)
+        mb = eng.start(interval=1e-3)
+        try:
+            tickets = []
+            for i in range(6):
+                tickets.append(mb.submit("embed",
+                                         rng.integers(0, 240, 8)))
+                if i == 2:
+                    tickets.append(mb.submit(
+                        "insert", _rand_batch(rng, 240, 16)))
+            values = [t.result(timeout=30) for t in tickets]
+            assert all(v is not None for v in values)
+            # barrier still holds through the background consumer
+            versions = [t.version for t in tickets]
+            assert versions == sorted(versions)
+        finally:
+            eng.stop()
+        assert mb.pending() == 0
+        with pytest.raises(RuntimeError):   # double-start guarded
+            eng.start()
+            eng.start()
+        eng.stop()
+
+    def test_auto_checkpoint_when_wal_outgrows_budget(self, tmp_path):
+        rng = np.random.default_rng(66)
+        eng = ServingEngine(_mkstore(seed=66), data_dir=str(tmp_path),
+                            num_shards=2)
+        mb = eng.start(interval=1e-3, checkpoint_bytes=64)
+        try:
+            t = mb.submit("insert", _rand_batch(rng, 240, 32))
+            t.result(timeout=30)
+            deadline = time.time() + 30
+            while eng.generation == 0 and time.time() < deadline:
+                time.sleep(0.01)
+            assert eng.generation >= 1 and eng.checkpoints >= 1
+        finally:
+            eng.close()
+
+    def test_checkpoint_requires_durability(self):
+        eng = ServingEngine(_mkstore(seed=1))
+        with pytest.raises(RuntimeError):
+            eng.checkpoint()
+
+    def test_loop_survives_checkpoint_failure(self, tmp_path,
+                                              monkeypatch):
+        """An engine-level failure in the background consumer (e.g. a
+        checkpoint hitting a full disk) must not kill the thread: the
+        error is recorded, auto-checkpointing stops, and submitters
+        keep being served."""
+        rng = np.random.default_rng(88)
+        eng = ServingEngine(_mkstore(seed=88), data_dir=str(tmp_path))
+        boom = OSError("disk full")
+
+        def failing_checkpoint():
+            raise boom
+        monkeypatch.setattr(eng, "checkpoint", failing_checkpoint)
+        mb = eng.start(interval=1e-3, checkpoint_bytes=16)
+        try:
+            mb.submit("insert", _rand_batch(rng, 240, 8)).result(
+                timeout=30)
+            deadline = time.time() + 30
+            while eng.loop_error is None and time.time() < deadline:
+                time.sleep(0.01)
+            assert eng.loop_error is boom
+            assert "loop_error" in eng.stats()
+            # the consumer is still alive and serving
+            out = mb.submit("embed", np.array([1, 2])).result(timeout=30)
+            assert out.shape == (2, 5)
+        finally:
+            eng.close()
