@@ -2,12 +2,22 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint install install-dev serve-demo bench-serving \
-	bench-encoder bench-smoke
+.PHONY: test test-fast test-slow lint install install-dev serve-demo \
+	bench-serving bench-encoder bench-smoke
 
 # Tier-1 verify: the whole suite, fail-fast.
 test:
 	$(PY) -m pytest -x -q
+
+# CI fast lane: everything not marked `slow` (no subprocess compiles,
+# no crash-recovery/fuzz loops) — the quick local signal.
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+# CI slow lane: only the `slow`-marked subprocess / plan-cache /
+# recovery / fuzz tests.  fast + slow together == `make test`.
+test-slow:
+	$(PY) -m pytest -x -q -m slow
 
 # Style/defect gate (ruff; `make install-dev` provides it).
 lint:

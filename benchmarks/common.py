@@ -15,6 +15,12 @@ QUICK = False
 #: suite's partitioned-engine rows (`make bench-serving SHARDS=N`).
 SHARDS = 2
 
+#: names emitted since the harness last reset it — `benchmarks.run`
+#: clears this before each suite and checks it against the driver's
+#: `expected_keys()` schema afterwards, so a driver that silently
+#: stops emitting rows FAILS instead of passing vacuously.
+EMITTED: list = []
+
 
 def pick(full, quick):
     """Suite-size helper: `full` normally, `quick` under --quick."""
@@ -37,4 +43,5 @@ def time_it(fn: Callable, *args, warmup: int = 1, iters: int = 3,
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
     """name,us_per_call,derived CSV row (the harness contract)."""
+    EMITTED.append(name)
     print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -56,6 +56,27 @@ QUICK_SIZES = {
 }
 K = 16
 
+# the tier-2 (persistent, cross-process) measurement poles: pallas (the
+# O(s log s) destination sort) and xla (w_eff only)
+PERSIST = [("pallas", 100_000, 1_000_000,
+            {"tile_n": 256, "edge_block": 256}),
+           ("xla", 100_000, 1_000_000, {"laplacian": True})]
+QUICK_PERSIST = [("pallas", 500, 4_000,
+                  {"tile_n": 64, "edge_block": 128})]
+
+
+def expected_keys() -> list:
+    """Schema for `benchmarks.run`'s silently-empty-driver check."""
+    keys = []
+    for backend in common.pick(SIZES, QUICK_SIZES):
+        tag = backend.replace(":", "_")
+        keys += [f"encoder/{tag}/fit_warm", f"encoder/{tag}/plan_cache"]
+    for backend, *_ in common.pick(PERSIST, QUICK_PERSIST):
+        tag = backend.replace(":", "_")
+        keys += [f"encoder/{tag}/plan_cold_process",
+                 f"encoder/{tag}/plan_warm_persistent"]
+    return keys
+
 # Child for the tier-2 measurement: plan (no embed, no compile) a known
 # synthetic graph against the given cache dir, report plan seconds and
 # counters.  Spawned twice: cold (empty dir) then warm (entry on disk).
@@ -128,14 +149,8 @@ def run() -> None:
              f"/hits{emb.plan_stats['hits']}")
 
     # -- tier 2: cold process vs warm-persistent-cache (ISSUE 3) ----------
-    # pallas (the O(s log s) destination sort) and xla (w_eff only) are
-    # the interesting poles; each child is a genuinely fresh interpreter
-    persist = common.pick(
-        [("pallas", 100_000, 1_000_000,
-          {"tile_n": 256, "edge_block": 256}),
-         ("xla", 100_000, 1_000_000, {"laplacian": True})],
-        [("pallas", 500, 4_000, {"tile_n": 64, "edge_block": 128})])
-    for backend, n, s, over in persist:
+    # each child is a genuinely fresh interpreter
+    for backend, n, s, over in common.pick(PERSIST, QUICK_PERSIST):
         cache = tempfile.mkdtemp(prefix="repro-plan-bench-")
         try:
             cold = _plan_in_fresh_process(backend, n, s, over, cache)

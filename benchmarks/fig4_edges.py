@@ -18,6 +18,12 @@ K = 50
 N = 200_000
 
 
+def expected_keys() -> list:
+    """Schema for `benchmarks.run`'s silently-empty-driver check."""
+    return ([f"fig4/edges{s}" for s in common.pick(SIZES, QUICK_SIZES)]
+            + ["fig4/linear_fit"])
+
+
 def run() -> None:
     rng = np.random.default_rng(0)
     n = common.pick(N, 1_000)

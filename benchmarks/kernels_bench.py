@@ -16,6 +16,14 @@ from repro.kernels import ops
 import numpy as np
 
 
+def expected_keys() -> list:
+    """Schema for `benchmarks.run`'s silently-empty-driver check."""
+    sizes = common.pick((1_000_000, 4_000_000), (4_000, 8_000))
+    return ([f"kernels/gee_xla_scatter/s{s}" for s in sizes]
+            + ["kernels/gee_pallas_interpret/s16000",
+               "kernels/flash_attn_interpret/s256"])
+
+
 def run() -> None:
     rng = np.random.default_rng(0)
     n, k = common.pick((100_000, 50), (1_000, 8))

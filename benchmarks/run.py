@@ -11,16 +11,46 @@ Suites:
     encoder  — unified Embedder API: per-backend edges/s side by side
                + plan-cache (host packing removed on refit)
     serving  — online-service update latency vs full re-embed + queries
+               + sharded-engine rows incl. per-shard accumulator memory
     roofline — per-cell roofline terms from dry-run artifacts
+
+Schema check: after each suite runs, the rows it emitted are checked
+against the driver's ``expected_keys()`` declaration — a driver that
+silently emits nothing (or loses a row to a refactor) FAILS the run
+instead of passing vacuously (the `make bench-smoke` CI gate relies on
+this).
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import traceback
 
-SUITES = ("table1", "fig4", "kernels", "encoder", "serving", "fig3",
-          "roofline")
+SUITES = {
+    "table1": "benchmarks.table1_runtimes",
+    "fig4": "benchmarks.fig4_edges",
+    "kernels": "benchmarks.kernels_bench",
+    "encoder": "benchmarks.encoder_bench",
+    "serving": "benchmarks.serving_bench",
+    "fig3": "benchmarks.fig3_scaling",
+    "roofline": "benchmarks.roofline_report",
+}
+
+
+def _check_schema(suite: str, module) -> None:
+    """Every key the driver declares must have been emitted."""
+    from benchmarks import common
+    expected_keys = getattr(module, "expected_keys", None)
+    if expected_keys is None:
+        return
+    emitted = set(common.EMITTED)
+    missing = [k for k in expected_keys() if k not in emitted]
+    if missing:
+        raise RuntimeError(
+            f"suite {suite!r} finished without emitting expected "
+            f"result keys {missing} — a silently-empty benchmark is a "
+            "failure, not a pass")
 
 
 def main() -> None:
@@ -47,23 +77,12 @@ def main() -> None:
     failures = []
     for suite in chosen:
         try:
-            if suite == "table1":
-                from benchmarks.table1_runtimes import run
-            elif suite == "fig3":
-                from benchmarks.fig3_scaling import run
-            elif suite == "fig4":
-                from benchmarks.fig4_edges import run
-            elif suite == "kernels":
-                from benchmarks.kernels_bench import run
-            elif suite == "encoder":
-                from benchmarks.encoder_bench import run
-            elif suite == "serving":
-                from benchmarks.serving_bench import run
-            elif suite == "roofline":
-                from benchmarks.roofline_report import run
-            else:
+            if suite not in SUITES:
                 raise ValueError(f"unknown suite {suite}")
-            run()
+            module = importlib.import_module(SUITES[suite])
+            common.EMITTED.clear()
+            module.run()
+            _check_schema(suite, module)
         except Exception:
             traceback.print_exc()
             failures.append(suite)

@@ -33,6 +33,19 @@ N, K, S = 100_000, 10, 1_500_000
 DELTA_FRAC = 0.01
 
 
+def expected_keys() -> list:
+    """Schema for `benchmarks.run`'s silently-empty-driver check."""
+    keys = ["serving_full_rebuild", "serving_delta_1pct",
+            "serving_gather_8192", "serving_predict_4096",
+            "serving_topk_256", "serving_engine_delta_wal",
+            "serving_recovery_open"]
+    for p in sorted({1, max(1, common.SHARDS)}):
+        keys += [f"serving_engine_delta_p{p}",
+                 f"serving_engine_topk256_p{p}",
+                 f"serving_engine_shard_mem_p{p}"]
+    return keys
+
+
 def run() -> None:
     global N, S
     N = common.pick(N, 2_000)
@@ -84,20 +97,31 @@ def run() -> None:
 
 def _sharded_engine_section(rng, g, Y, batch) -> None:
     """The deployment path: per-shard-count delta fan-out + top-k
-    scatter/gather, WAL append-before-apply overhead, and cold
-    recovery (snapshot load + WAL replay + rebuild)."""
+    scatter/gather, per-shard accumulator memory (the owned-rows
+    O(n/p) contract, measured rather than asserted), WAL
+    append-before-apply overhead, and cold recovery (snapshot load +
+    WAL replay + rebuild)."""
     from repro.serving import GraphStore, ServingEngine
 
     du, dv, dw = batch.u, batch.v, batch.w     # pre-padded 1% delta
     qnodes = rng.integers(0, N, 256).astype(np.int32)
+    full_bytes = N * K * 4                     # one float32 (n, K) Z
     for p in sorted({1, max(1, common.SHARDS)}):
         eng = ServingEngine(GraphStore(g, Y, K), num_shards=p,
                             plan_cache=None)
         t = time_it(lambda: eng.apply_edge_delta(du, dv, dw))
-        emit(f"serving_engine_delta_p{p}", t, f"batch={du.shape[0]}")
+        emit(f"serving_engine_delta_p{p}", t,
+             f"batch={du.shape[0]};edges_per_s={du.shape[0] / t:,.0f}")
         t = time_it(lambda: eng.query_topk(qnodes, k=10,
                                            block_rows=1 << 15), iters=2)
         emit(f"serving_engine_topk256_p{p}", t, f"{256 / t:,.0f}/s")
+        # owned-rows memory win: peak per-shard accumulator bytes
+        # should track ceil(n/p)*K*4, i.e. ~1/p of the full Z
+        peak = eng.stats()["peak_shard_accumulator_bytes"]
+        emit(f"serving_engine_shard_mem_p{p}", 0.0,
+             f"peak_accumulator_bytes={peak};full_z_bytes={full_bytes};"
+             f"frac_of_full={peak / full_bytes:.3f};"
+             f"expected_frac={-(-N // p) / N:.3f}")
 
     d = tempfile.mkdtemp(prefix="gee-bench-dep-")
     try:

@@ -36,6 +36,18 @@ QUICK_GRAPHS = [("tiny", 400, 4_000)]
 K = 50
 
 
+def expected_keys() -> list:
+    """Schema for `benchmarks.run`'s silently-empty-driver check."""
+    keys = []
+    for name, _n, s in common.pick(GRAPHS, QUICK_GRAPHS):
+        if s <= 100_000:
+            keys.append(f"table1/{name}/python_loop")
+        keys += [f"table1/{name}/numpy_compiled",
+                 f"table1/{name}/gee_xla",
+                 f"table1/{name}/allclose"]
+    return keys
+
+
 def run() -> None:
     rng = np.random.default_rng(0)
     K_ = common.pick(K, 8)

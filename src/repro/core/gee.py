@@ -112,6 +112,69 @@ def gee_streaming(chunks, Y, *, K: int, n: int,
 
 
 # ---------------------------------------------------------------------------
+# Owned-rows (partitioned) accumulate: O(n/p) accumulators per shard
+# ---------------------------------------------------------------------------
+#
+# A row partition assigns each worker the contiguous Z rows [lo, hi).
+# Because GEE maps over edges and an edge (u, v, w) touches only rows u
+# and v, the contributions landing in a worker's rows are a filterable
+# subset of the edge multiset: (dst, src, w) triples with dst in
+# [lo, hi), remapped to local row dst - lo.  These kernels scatter that
+# pre-bucketed form into an (n_local, K) accumulator — the labels Y and
+# projection weights Wv stay GLOBAL (an owned row's value depends on
+# its neighbors' labels, which may live on other workers), only the
+# accumulator shrinks.
+
+
+def owned_edge_contributions(src, w, Y, Wv):
+    """Per-contribution (class, value) for owned-destination triples.
+
+    `src` is the GLOBAL label-donor node of each contribution; unknown
+    source labels contribute value 0 (class clamped to 0), exactly as
+    in `edge_contributions` — this is one direction of that function,
+    already filtered/remapped by the host plan."""
+    ys = Y[src]
+    cls = jnp.maximum(ys, 0)
+    val = jnp.where(ys >= 0, Wv[src] * w, 0.0)
+    return cls, val
+
+
+@functools.partial(jax.jit, static_argnames=("K", "n_local"))
+def gee_owned(rows, src, w, Y, Wv, *, K: int, n_local: int):
+    """One-pass GEE over owned-destination contributions.
+
+    rows: LOCAL destination rows in [0, n_local); src: GLOBAL label
+    donors; Y/Wv: global labels and projection weights.  Returns the
+    (n_local, K) owned slice of Z — bit-identical in content to the
+    corresponding rows of the full accumulate."""
+    cls, val = owned_edge_contributions(src, w.astype(jnp.float32), Y, Wv)
+    return jnp.zeros((n_local, K), jnp.float32).at[rows, cls].add(val)
+
+
+@functools.partial(jax.jit, static_argnames=("K",))
+def gee_apply_delta_owned(Z, rows, src, w, Y, Wv, *, K: int,
+                          sign: float = 1.0):
+    """Fold owned-destination contributions into an (n_local, K) slice
+    (the partitioned twin of `gee_apply_delta`; exact by linearity).
+    Padded slots carry w = 0 and are no-ops for any labeling."""
+    cls, val = owned_edge_contributions(src, w.astype(jnp.float32), Y, Wv)
+    return Z.at[rows, cls].add(sign * val)
+
+
+def gee_streaming_owned(chunks, Y, *, K: int, n_local: int,
+                        Wv: Optional[jnp.ndarray] = None):
+    """Chunked owned-rows accumulate: device working set is O(chunk)
+    contribution data plus the (n_local, K) slice — the shard-rebuild
+    path.  `chunks` yields (rows, src, w) triples."""
+    if Wv is None:
+        Wv = make_w(Y, K)
+    Z = jnp.zeros((n_local, K), jnp.float32)
+    for (rows, src, w) in chunks:
+        Z = gee_apply_delta_owned(Z, rows, src, w, Y, Wv, K=K)
+    return Z
+
+
+# ---------------------------------------------------------------------------
 # Unsupervised refinement (GEE clustering)
 # ---------------------------------------------------------------------------
 

@@ -47,3 +47,18 @@ def gee_numpy(u, v, w, Y, K: int, n: int) -> np.ndarray:
     np.add.at(Z, (u[mv], yv[mv]), Wv[v[mv]] * w[mv])
     np.add.at(Z, (v[mu], yu[mu]), Wv[u[mu]] * w[mu])
     return Z
+
+
+def gee_numpy_owned(rows, src, w, Y, Wv, K: int, n_local: int
+                    ) -> np.ndarray:
+    """Owned-rows scatter over pre-bucketed (local row, global source,
+    weight) contributions — the host oracle for the partitioned
+    accumulate path (`core.gee.gee_owned`).  Wv is passed in (the
+    Embedder owns the projection weights Z is built with)."""
+    Y = np.asarray(Y)
+    Wv = np.asarray(Wv, np.float32)
+    Z = np.zeros((n_local, K), np.float32)
+    ys = Y[src]
+    m = ys >= 0
+    np.add.at(Z, (rows[m], ys[m]), Wv[src[m]] * w[m])
+    return Z

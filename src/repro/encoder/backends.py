@@ -43,7 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.encoder.config import EncoderConfig
-from repro.encoder.plan import Plan, effective_weights
+from repro.encoder.plan import Plan, effective_weights, owned_contributions
 from repro.graph.edges import Graph
 
 _REGISTRY: Dict[str, Type["Backend"]] = {}
@@ -82,6 +82,10 @@ class Backend:
     plan_version: int = 1
     #: whether plan_host output may be persisted cross-process
     persistable: bool = True
+    #: whether this backend implements the owned-rows accumulate path
+    #: (`EncoderConfig.row_partition`): an (n_local, K) accumulator over
+    #: contributions pre-bucketed by owned destination
+    supports_row_partition: bool = False
 
     def cache_context(self, *, mesh=None) -> str:
         """Runtime context baked into the persistent-cache key (e.g.
@@ -108,12 +112,21 @@ class Backend:
         w_eff only rides the host dict (and hence disk) when Laplacian
         scaling makes it a real O(s) artifact; unscaled it IS graph.w,
         so persisting it would bloat every cache entry with a full
-        per-edge copy that costs more to load than to recompute."""
-        if host is None:
+        per-edge copy that costs more to load than to recompute.
+        (Partitioned plans fold w_eff into the owned contribution
+        arrays, so they never persist the full-length copy either.)"""
+        built = host is None
+        if built:
             w_eff = effective_weights(graph, config)
-            host = {**({"w_eff": w_eff} if config.laplacian else {}),
+            keep_w = config.laplacian and config.row_partition is None
+            host = {**({"w_eff": w_eff} if keep_w else {}),
                     **self.plan_host(graph, config, w_eff, mesh=mesh)}
-        else:
+        if config.row_partition is not None:
+            # owned plans folded the scaling into o_w: don't retain (or,
+            # on a cache hit, rebuild) a second full-length copy that no
+            # partitioned finalize/embed path ever reads
+            w_eff = graph.w
+        elif not built:
             w_eff = (host["w_eff"] if "w_eff" in host
                      else effective_weights(graph, config))
         p = Plan(backend=self.name, config=config, n=graph.n, s=graph.s,
@@ -128,18 +141,46 @@ class Backend:
         raise NotImplementedError
 
 
+def _owned_plan_host(graph: Graph, config: EncoderConfig,
+                     w_eff: np.ndarray) -> Dict:
+    """Shared host half of a partitioned plan: contributions bucketed
+    by owned destination, destination rows remapped to [0, n_local)."""
+    rows, src, w = owned_contributions(graph, w_eff,
+                                       *config.row_partition)
+    return {"o_rows": rows, "o_src": src, "o_w": w}
+
+
 @register_backend("numpy")
 class NumpyBackend(Backend):
     """`ref_python.gee_numpy`: the host-side oracle every other backend
     is conformance-checked against."""
 
+    supports_row_partition = True
+
+    def plan_host(self, graph, config, w_eff, *, mesh=None):
+        if config.row_partition is None:
+            return {}
+        return _owned_plan_host(graph, config, w_eff)
+
     def plan_finalize(self, p, graph, *, mesh=None):
-        p.data = {"u": np.asarray(graph.u), "v": np.asarray(graph.v)}
+        if p.config.row_partition is None:
+            p.data = {"u": np.asarray(graph.u), "v": np.asarray(graph.v)}
+        else:
+            h = p.host
+            p.data = {"rows": np.asarray(h["o_rows"], np.int32),
+                      "src": np.asarray(h["o_src"], np.int32),
+                      "w": np.asarray(h["o_w"], np.float32)}
 
     def embed(self, plan, Yj, Wv):
-        from repro.core.ref_python import gee_numpy
+        from repro.core.ref_python import gee_numpy, gee_numpy_owned
         Y = np.asarray(Yj)
-        Z = gee_numpy(plan.data["u"], plan.data["v"], plan.w_eff, Y,
+        d = plan.data
+        if plan.config.row_partition is not None:
+            Z = gee_numpy_owned(d["rows"], d["src"], d["w"], Y,
+                                np.asarray(Wv), plan.config.K,
+                                plan.n_local)
+            return jnp.asarray(Z), {}
+        Z = gee_numpy(d["u"], d["v"], plan.w_eff, Y,
                       plan.config.K, plan.n)
         return jnp.asarray(Z), {}
 
@@ -148,15 +189,38 @@ class NumpyBackend(Backend):
 class XlaBackend(Backend):
     """`core.gee` (jitted XLA scatter-add) — the single-device hot
     path.  Passes the Embedder-owned Wv through `gee`'s precompute
-    parameter instead of re-deriving it from Y."""
+    parameter instead of re-deriving it from Y.  Under a row partition
+    it scatters the pre-bucketed owned contributions into an
+    (n_local, K) accumulator (`core.gee.gee_owned`)."""
+
+    supports_row_partition = True
+
+    def plan_host(self, graph, config, w_eff, *, mesh=None):
+        if config.row_partition is None:
+            return {}
+        return _owned_plan_host(graph, config, w_eff)
 
     def plan_finalize(self, p, graph, *, mesh=None):
-        p.data = {"u": jnp.asarray(graph.u), "v": jnp.asarray(graph.v),
-                  "w": jnp.asarray(p.w_eff)}
+        if p.config.row_partition is None:
+            p.data = {"u": jnp.asarray(graph.u),
+                      "v": jnp.asarray(graph.v),
+                      "w": jnp.asarray(p.w_eff)}
+        else:
+            h = p.host
+            p.data = {"rows": jnp.asarray(np.asarray(h["o_rows"],
+                                                     np.int32)),
+                      "src": jnp.asarray(np.asarray(h["o_src"],
+                                                    np.int32)),
+                      "w": jnp.asarray(np.asarray(h["o_w"],
+                                                  np.float32))}
 
     def embed(self, plan, Yj, Wv):
-        from repro.core.gee import gee
+        from repro.core.gee import gee, gee_owned
         d = plan.data
+        if plan.config.row_partition is not None:
+            Z = gee_owned(d["rows"], d["src"], d["w"], Yj, Wv,
+                          K=plan.config.K, n_local=plan.n_local)
+            return Z, {}
         Z = gee(d["u"], d["v"], d["w"], Yj, K=plan.config.K, n=plan.n,
                 Wv=Wv)
         return Z, {}
@@ -212,17 +276,47 @@ class StreamingBackend(Backend):
     plus Z ever lives on device (the serving-rebuild and out-of-core
     ingestion path).  Chunks stay host-side in the plan (non-tail
     chunks are views of the caller's arrays, not copies; chunking is
-    cheap, so only w_eff rides the persistent cache)."""
+    cheap, so only w_eff rides the persistent cache).
+
+    Under a row partition the chunks are owned-destination
+    contribution triples and the accumulator is (n_local, K) — device
+    memory is O(chunk + n/p), the sharded serving rebuild path."""
+
+    supports_row_partition = True
+
+    def plan_host(self, graph, config, w_eff, *, mesh=None):
+        if config.row_partition is None:
+            return {}
+        # the O(s) destination bucketing is the expensive half here —
+        # persist it; chunking the bucketed arrays stays per-process
+        return _owned_plan_host(graph, config, w_eff)
 
     def plan_finalize(self, p, graph, *, mesh=None):
         from repro.graph.edges import chunk_edges
-        p.data = {"chunks": list(chunk_edges(
-            np.asarray(graph.u, np.int32), np.asarray(graph.v, np.int32),
-            p.w_eff, p.config.chunk_size))}
+        if p.config.row_partition is None:
+            p.data = {"chunks": list(chunk_edges(
+                np.asarray(graph.u, np.int32),
+                np.asarray(graph.v, np.int32),
+                p.w_eff, p.config.chunk_size))}
+        else:
+            h = p.host
+            # chunk_edges pads tails with (0, 0, 0.0) triples — local
+            # row 0 with w = 0 is a no-op contribution for any labeling
+            p.data = {"chunks": list(chunk_edges(
+                np.asarray(h["o_rows"], np.int32),
+                np.asarray(h["o_src"], np.int32),
+                np.asarray(h["o_w"], np.float32),
+                p.config.chunk_size))}
 
     def embed(self, plan, Yj, Wv):
-        from repro.core.gee import gee_streaming
+        from repro.core.gee import gee_streaming, gee_streaming_owned
         cfg = plan.config
+        if cfg.row_partition is not None:
+            Z = gee_streaming_owned(
+                ((jnp.asarray(r), jnp.asarray(s), jnp.asarray(w))
+                 for (r, s, w) in plan.data["chunks"]),
+                Yj, K=cfg.K, n_local=plan.n_local, Wv=Wv)
+            return Z, {"chunks": len(plan.data["chunks"])}
         Z = gee_streaming(
             ((jnp.asarray(u), jnp.asarray(v), jnp.asarray(w))
              for (u, v, w) in plan.data["chunks"]),

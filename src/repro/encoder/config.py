@@ -11,7 +11,7 @@ keyed on it.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -29,6 +29,21 @@ class EncoderConfig:
     Refinement (unsupervised GEE clustering, ``Embedder.refine``):
       refine_iters   embed -> k-means -> reassign rounds.
       kmeans_iters   k-means steps per round.
+
+    Row partitioning (owned-rows accumulate — shrinks Z, not its rows):
+      row_partition  (lo, hi) global row range this Embedder OWNS (a
+                  `graph.partition.RowPartition` slice), or None for
+                  the full embedding.  When set, the plan buckets edge
+                  contributions by owned destination (remapped to local
+                  rows [0, hi - lo)), the backend allocates only an
+                  (hi - lo, K) accumulator, and the fitted `Z_` holds
+                  exactly the owned rows — labels stay GLOBAL (an owned
+                  row's value depends on its neighbors' labels), and
+                  node-id arguments to `transform`/`predict` stay
+                  global too.  The partition joins the plan-cache key
+                  (tier 1 and tier 2), so a resharded deployment can
+                  never hit a stale plan.  Supported by the numpy /
+                  xla / streaming backends.
 
     Backend tuning (never change Z, only speed/memory):
       backend     execution strategy by registry name, or "auto"
@@ -48,6 +63,7 @@ class EncoderConfig:
     laplacian: bool = False
     dtype: str = "float32"
     backend: str = "auto"
+    row_partition: Optional[Tuple[int, int]] = None
     # refinement
     refine_iters: int = 10
     kmeans_iters: int = 3
@@ -65,3 +81,17 @@ class EncoderConfig:
             raise ValueError(f"K must be >= 1, got {self.K}")
         if self.chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
+        if self.row_partition is not None:
+            try:
+                lo, hi = self.row_partition
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"row_partition must be a (lo, hi) pair, got "
+                    f"{self.row_partition!r}") from None
+            if not (0 <= int(lo) < int(hi)):
+                raise ValueError(
+                    f"row_partition needs 0 <= lo < hi, got ({lo}, {hi})")
+            # normalize (lists, np ints) so the config stays hashable
+            # and its cache token is canonical
+            object.__setattr__(self, "row_partition",
+                               (int(lo), int(hi)))

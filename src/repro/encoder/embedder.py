@@ -38,10 +38,11 @@ import numpy as np
 
 import functools
 
-from repro.core.gee import (gee_apply_delta, kmeans_refine_round, make_w)
+from repro.core.gee import (gee_apply_delta, gee_apply_delta_owned,
+                            kmeans_refine_round, make_w)
 from repro.encoder.backends import Backend, get_backend, resolve_auto
 from repro.encoder.config import EncoderConfig
-from repro.encoder.plan import Plan
+from repro.encoder.plan import Plan, owned_contributions
 from repro.encoder.plan_cache import PlanDiskCache, default_cache
 from repro.graph.edges import Graph, bucket_size
 from repro.graph.sources import as_graph
@@ -121,6 +122,16 @@ class Embedder:
         tier (or set REPRO_PLAN_CACHE=off process-wide)."""
         graph = as_graph(graph)
         backend = self._resolve_backend(graph)
+        rp = self.config.row_partition
+        if rp is not None:
+            if not backend.supports_row_partition:
+                raise ValueError(
+                    f"backend {backend.name!r} has no owned-rows "
+                    "accumulate path (row_partition); use one of the "
+                    "partition-aware backends (numpy, xla, streaming)")
+            if rp[1] > graph.n:
+                raise ValueError(
+                    f"row_partition {rp} exceeds graph n={graph.n}")
         if self._plan is not None and self._plan.matches(
                 graph, backend.name, self.config):
             self.plan_stats["hits"] += 1
@@ -218,6 +229,27 @@ class Embedder:
         delta.validate()
         if delta.s == 0:
             return self
+        rp = self.config.row_partition
+        if rp is not None:
+            # owned-rows path: bucket the delta by owned destination on
+            # the host (O(batch)), scatter into the (n_local, K) slice.
+            # Contributions landing outside [lo, hi) never touch owned
+            # rows (laplacian is rejected above, so Z is linear and
+            # non-incident edges are exact no-ops here).
+            rows, src, w = owned_contributions(delta, delta.w, *rp)
+            if rows.shape[0] == 0:
+                return self
+            pad = bucket_size(rows.shape[0]) - rows.shape[0]
+            if pad:
+                rows = np.concatenate([rows, np.zeros(pad, np.int32)])
+                src = np.concatenate([src, np.zeros(pad, np.int32)])
+                w = np.concatenate([w, np.zeros(pad, np.float32)])
+            self.Z_ = gee_apply_delta_owned(
+                self.Z_, jnp.asarray(rows), jnp.asarray(src),
+                jnp.asarray(w), self._Yj, self.Wv_, K=self.config.K,
+                sign=sign)
+            self._deltas_applied += 1
+            return self
         padded = delta.pad_to(bucket_size(delta.s))
         self.Z_ = gee_apply_delta(
             self.Z_, jnp.asarray(padded.u), jnp.asarray(padded.v),
@@ -240,6 +272,7 @@ class Embedder:
         falling back to a single-device full-graph pass."""
         if self._plan is None or self._Yfit is None:
             raise NotFittedError("refine() before fit()")
+        self._require_full_rows("refine")
         self._check_no_pending_deltas("refine")
         key = jax.random.PRNGKey(0) if key is None else key
         cfg = self.config
@@ -270,27 +303,40 @@ class Embedder:
             raise NotFittedError("not fitted")
         return self._plan.n
 
+    def _require_full_rows(self, what: str) -> None:
+        if self.config.row_partition is not None:
+            raise RuntimeError(
+                f"{what}() needs the full embedding, but this Embedder "
+                f"owns only rows {self.config.row_partition} "
+                "(row_partition) — run it on an unpartitioned Embedder")
+
     def _rows(self, nodes):
-        """Z rows for `nodes`, bounds-checked (jnp gather would silently
-        CLAMP out-of-range ids — a stale node id must raise, not return
-        a plausible wrong row)."""
+        """Z rows for `nodes` (GLOBAL ids, also under a row partition),
+        bounds-checked (jnp gather would silently CLAMP out-of-range
+        ids — a stale or unowned node id must raise, not return a
+        plausible wrong row)."""
         if self.Z_ is None:
             raise NotFittedError("not fitted")
         if nodes is None:
             return self.Z_
         nodes = np.asarray(nodes)
-        if nodes.size and (nodes.min() < 0 or nodes.max() >= self.n_):
-            raise IndexError(f"node ids must be in [0, {self.n_}), got "
-                             f"range [{nodes.min()}, {nodes.max()}]")
-        return self.Z_[jnp.asarray(nodes)]
+        lo, hi = self.config.row_partition or (0, self.n_)
+        if nodes.size and (nodes.min() < lo or nodes.max() >= hi):
+            owned = " owned" if self.config.row_partition else ""
+            raise IndexError(f"node ids must be in{owned} [{lo}, {hi}), "
+                             f"got range [{nodes.min()}, {nodes.max()}]")
+        return self.Z_[jnp.asarray(nodes - lo)]
 
     def transform(self, nodes=None) -> np.ndarray:
-        """Z rows for `nodes` (all rows if None), in config.dtype."""
+        """Z rows for `nodes` (all fitted rows if None — the owned
+        block under a row partition), in config.dtype.  Node ids are
+        always GLOBAL."""
         Z = self._rows(nodes)
         return np.asarray(Z.astype(jnp.dtype(self.config.dtype)))
 
     def predict(self, nodes=None) -> np.ndarray:
-        """argmax-Z class prediction for `nodes` (all nodes if None)."""
+        """argmax-Z class prediction for `nodes` (all fitted nodes if
+        None; global ids)."""
         Z = self._rows(nodes)
         return np.asarray(jnp.argmax(Z, axis=1).astype(jnp.int32))
 
@@ -307,6 +353,7 @@ class Embedder:
         structure, 0 = pure noise."""
         if self.Z_ is None:
             raise NotFittedError("to_features() before fit()")
+        self._require_full_rows("to_features")
         key = jax.random.PRNGKey(0) if key is None else key
         k_rot, k_noise = jax.random.split(key)
         Z = self.Z_ / jnp.maximum(

@@ -37,6 +37,34 @@ from repro.encoder.config import EncoderConfig
 from repro.graph.edges import Graph
 
 
+def owned_contributions(graph: Graph, w_eff: np.ndarray, lo: int,
+                        hi: int) -> tuple:
+    """Bucket the edge multiset by OWNED destination row.
+
+    Each edge (u, v, w) contributes to rows u (from source v) and v
+    (from source u); a row partition owning [lo, hi) only ever
+    accumulates the contributions whose destination falls in that
+    range.  Returns (rows, src, w): LOCAL destination rows in
+    [0, hi - lo), GLOBAL label-donor nodes, effective weights — the
+    label-free host artifact of a partitioned plan (persisted by the
+    tier-2 cache; O(s) to build, ~2s/p entries to store).
+
+    Laplacian scaling happens upstream in `effective_weights`, against
+    the degrees of the graph as passed — pass the FULL unpadded graph
+    (not a routed sub-multiset) when `laplacian=True`, so the
+    normalizer sees every edge of every endpoint."""
+    u = np.asarray(graph.u)
+    v = np.asarray(graph.v)
+    w = np.asarray(w_eff, np.float32)
+    dst = np.concatenate([u, v])
+    src = np.concatenate([v, u])          # label donor
+    wc = np.concatenate([w, w])
+    m = (dst >= lo) & (dst < hi)
+    return ((dst[m] - lo).astype(np.int32),
+            src[m].astype(np.int32),
+            wc[m].astype(np.float32))
+
+
 def effective_weights(graph: Graph, config: EncoderConfig) -> np.ndarray:
     """Laplacian-scaled weights, computed ONCE per plan.
 
@@ -72,6 +100,13 @@ class Plan:
     _u: Optional[np.ndarray] = None
     _v: Optional[np.ndarray] = None
     _w: Optional[np.ndarray] = None
+
+    @property
+    def n_local(self) -> int:
+        """Accumulator height: hi - lo under a row partition, else n.
+        (`n` stays the GLOBAL node count — labels are always (n,).)"""
+        rp = self.config.row_partition
+        return self.n if rp is None else rp[1] - rp[0]
 
     @classmethod
     def anchors(cls, graph: Graph) -> dict:

@@ -64,7 +64,11 @@ def config_token(config) -> str:
     """Canonical string of the config fields a plan depends on.  The
     `backend` field is excluded: the resolved backend NAME is its own
     key component (so `backend="auto"` and an explicit name that auto
-    resolves to share entries)."""
+    resolves to share entries).  `row_partition` is deliberately IN
+    the token — a partitioned plan's host artifacts are bucketed and
+    remapped for one specific (lo, hi) slice, so a resharded
+    deployment addresses different entries and can never hit a stale
+    plan (tested in test_encoder.py::TestOwnedRows)."""
     d = {k: v for k, v in asdict(config).items() if k != "backend"}
     return json.dumps(d, sort_keys=True)
 

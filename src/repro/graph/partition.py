@@ -16,7 +16,11 @@ Two axes, matching the two halves of the system:
   (u, v, w) contributes only to rows u and v, so a delta batch fans out
   only to the shards owning its endpoints (`route_edges`), and each
   shard's routed sub-multiset contains every edge incident to its rows
-  — its owned slice of Z is exact in isolation.
+  — its owned slice of Z is exact in isolation.  A slice is also a
+  first-class encoder concept: passing it as
+  `EncoderConfig.row_partition=(lo, hi)` makes the backend accumulate
+  ONLY the owned (hi - lo, K) rows, which is what gives sharded
+  serving its O(n/p) per-shard memory.
 """
 from __future__ import annotations
 
@@ -85,6 +89,11 @@ class RowPartition:
     def slice(self, shard: int) -> tuple[int, int]:
         """(lo, hi) row range owned by `shard`."""
         return int(self.bounds[shard]), int(self.bounds[shard + 1])
+
+    def slices(self):
+        """All (lo, hi) ranges in shard order — each is directly usable
+        as an `EncoderConfig.row_partition`."""
+        return [self.slice(i) for i in range(self.p)]
 
     def shard_of(self, nodes) -> np.ndarray:
         """Owning shard id per node (vectorized)."""

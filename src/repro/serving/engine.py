@@ -8,7 +8,11 @@ holding all of Z in one place:
   deltas fan out only to the shards owning their endpoint rows, and
   queries scatter/gather (row gathers go to owners; top-k scores every
   shard's owned slice with global-id-stamped candidates and merges the
-  per-shard lists — `queries.merge_topk`);
+  per-shard lists — `queries.merge_topk`).  Each sub-range shard's
+  Embedder runs the encoder's owned-rows plan
+  (`EncoderConfig.row_partition`), so a shard allocates only its
+  (n/p, K) accumulator slice — per-shard device memory shrinks as
+  shards are added (`stats()["shard_accumulator_bytes"]`);
 * a **durable write-ahead delta log** (`serving.wal`) — every accepted
   mutation is appended BEFORE it is applied, so a crashed engine
   recovers by replaying the WAL suffix on top of the last snapshot and
@@ -79,10 +83,14 @@ class ServingEngine:
         self.rebuild_churn = float(rebuild_churn)
         self.fsync = bool(fsync)
         self.partition = RowPartition(store.n, num_shards)
+        # n=store.n turns every proper sub-range shard into an
+        # owned-rows Embedder (row_partition): the accumulator is
+        # (n/p, K) per shard, not (n, K) — the 1-shard deployment keeps
+        # the unpartitioned single-host fast path
         self.shards = [
             EmbeddingShard(i, *self.partition.slice(i), K=store.K,
-                           chunk_size=chunk_size, backend=backend,
-                           plan_cache=plan_cache)
+                           n=store.n, chunk_size=chunk_size,
+                           backend=backend, plan_cache=plan_cache)
             for i in range(num_shards)]
         self.epoch = 0
         self.rebuilds = 0
@@ -565,6 +573,7 @@ class ServingEngine:
             for s in self.shards:
                 for key, val in s.plan_stats.items():
                     plan[key] += val
+            acc = [s.accumulator_nbytes for s in self.shards]
             out = {"version": self.version, "epoch": self.epoch,
                    "num_shards": self.partition.p,
                    "deltas_applied": self.deltas_applied,
@@ -572,7 +581,11 @@ class ServingEngine:
                    "log_edges": self.store.log_edges,
                    "base_edges": self.store.base.s,
                    "fingerprint": self.store.fingerprint(),
-                   "plan_stats": plan}
+                   "plan_stats": plan,
+                   # the owned-rows memory contract, observable: peak
+                   # per-shard accumulator bytes scales ~ n/p
+                   "shard_accumulator_bytes": acc,
+                   "peak_shard_accumulator_bytes": max(acc, default=0)}
             if self.loop_error is not None:
                 out["loop_error"] = repr(self.loop_error)
             if self.data_dir is not None:

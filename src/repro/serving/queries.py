@@ -12,7 +12,9 @@ many user requests into one kernel call):
   running top-k is merged with ``lax.top_k`` per block.
 
 Every kernel also exists in a **row-sliced** form for the sharded
-engine, where no process holds all of Z:
+engine, where no process holds all of Z (with owned-rows encoder plans
+a shard's `Z_owned` IS its whole accumulator — these kernels only ever
+see the (n/p, K) local slice plus its global `row_offset`):
 
 * ``topk_cosine_q``      — top-k of externally supplied query vectors
   against a candidate row block living at ``row_offset`` in the global

@@ -15,13 +15,17 @@ rebuild under churned labels — new routed arrays, same content — is a
 tier-2 disk hit, and a second replica or a recovered engine skips host
 preprocessing entirely.
 
-Single-host note: the Embedder accumulates a full-width (n, K) Z and
-the shard reads only its owned rows.  The boundary is message-shaped —
-routed edge batches in, owned rows / global-id-stamped top-k candidates
-/ per-class partial sums out — which is what a true multi-host
-deployment needs; restricting the accumulator itself to owned rows is
-a backend-level optimization this slicing deliberately leaves behind
-the same interface.
+Memory: a proper sub-range shard configures its Embedder with
+``EncoderConfig.row_partition=(lo, hi)``, so the backend allocates only
+the owned (hi - lo, K) accumulator — per-shard device memory is
+O(n/p + chunk), not O(n), and adding shards genuinely shrinks each
+worker's footprint (the bench reports per-shard peak accumulator
+bytes).  Labels stay global (an owned row's value depends on its
+neighbors' labels, which live on other shards).  The degenerate
+full-range shard — (lo, hi) == (0, n), the 1-shard deployment and the
+`EmbeddingService` compat path — keeps an unpartitioned Embedder so
+the old single-host surface (`engine.embedder`, tier-1 plan hits off a
+quiet store) is byte-for-byte unchanged.
 """
 from __future__ import annotations
 
@@ -39,12 +43,20 @@ class EmbeddingShard:
     """Owns Z rows [lo, hi); embeds and serves only its slice."""
 
     def __init__(self, shard_id: int, lo: int, hi: int, *, K: int,
-                 chunk_size: int = 1 << 20, backend: str = "streaming",
+                 n: Optional[int] = None, chunk_size: int = 1 << 20,
+                 backend: str = "streaming",
                  plan_cache: Union[str, None] = "auto"):
         self.shard_id = int(shard_id)
         self.lo, self.hi = int(lo), int(hi)
+        #: owned-rows mode: the Embedder accumulates ONLY [lo, hi).
+        #: Unknown total n (legacy direct construction) or a full-range
+        #: slice keeps the unpartitioned Embedder.
+        self.owned_only = (n is not None
+                           and (self.lo, self.hi) != (0, int(n)))
         self.embedder = Embedder(
-            EncoderConfig(K=int(K), chunk_size=int(chunk_size)),
+            EncoderConfig(K=int(K), chunk_size=int(chunk_size),
+                          row_partition=((self.lo, self.hi)
+                                         if self.owned_only else None)),
             backend=backend, plan_cache=plan_cache)
         self._Zn: Optional[jnp.ndarray] = None
 
@@ -61,7 +73,8 @@ class EmbeddingShard:
 
     def apply_delta(self, sub: Graph) -> None:
         """Fold a routed edge sub-batch into Z (weights sign-folded
-        upstream; O(batch), exact by linearity)."""
+        upstream; O(batch), exact by linearity).  In owned-rows mode
+        the Embedder buckets the batch by owned destination itself."""
         if sub.s:
             self.embedder.partial_fit(sub)
             self._Zn = None
@@ -71,15 +84,36 @@ class EmbeddingShard:
     @property
     def Z_owned(self) -> jnp.ndarray:
         """The owned (hi - lo, K) slice — the only rows this shard may
-        serve; unowned accumulator rows are partial sums."""
+        serve.  In owned-rows mode this IS the whole accumulator; the
+        unpartitioned fallback slices its full-width Z (whose unowned
+        rows are partial sums)."""
+        if self.owned_only:
+            return self.embedder.Z_
         return self.embedder.Z_[self.lo:self.hi]
 
+    @property
+    def accumulator_nbytes(self) -> int:
+        """Device bytes held by this shard's Z accumulator — the
+        memory the owned-rows plan shrinks from O(n) to O(n/p)."""
+        Z = self.embedder.Z_
+        if Z is None:
+            return 0
+        return int(np.prod(Z.shape)) * Z.dtype.itemsize
+
     def rows(self, nodes: np.ndarray) -> jnp.ndarray:
-        """Z rows for OWNED global node ids."""
+        """Z rows for OWNED global node ids.
+
+        A real IndexError, not an assert: jnp gather silently CLAMPS
+        out-of-range indices, so a routing bug would otherwise return
+        plausible wrong rows (and `python -O` strips asserts)."""
         nodes = np.asarray(nodes)
-        if nodes.size:
-            assert nodes.min() >= self.lo and nodes.max() < self.hi, \
-                f"shard {self.shard_id} asked for unowned rows"
+        if nodes.size and (nodes.min() < self.lo
+                           or nodes.max() >= self.hi):
+            raise IndexError(
+                f"shard {self.shard_id} owns rows [{self.lo}, "
+                f"{self.hi}), got range [{nodes.min()}, {nodes.max()}]")
+        if self.owned_only:
+            return self.embedder.Z_[jnp.asarray(nodes - self.lo)]
         return self.embedder.Z_[jnp.asarray(nodes)]
 
     def normalized(self) -> jnp.ndarray:

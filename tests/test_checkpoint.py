@@ -62,6 +62,7 @@ class TestAtomicCheckpoint:
         assert CK.latest_step(str(tmp_path)) == 30
 
 
+@pytest.mark.slow
 class TestCrashRecovery:
     def test_kill_mid_training_then_resume(self, tmp_path):
         """SIGKILL a trainer subprocess mid-run; a fresh run must resume

@@ -265,6 +265,130 @@ class TestPersistentPlanCache:
                                      "disk_hits": 1, "disk_stores": 0}
 
 
+class TestOwnedRows:
+    """The owned-rows accumulate path (`EncoderConfig.row_partition`):
+    each partitioned Embedder allocates only its (hi - lo, K) slice,
+    and the slices concatenate to the unsharded Z — for full-graph
+    input AND for the routed sub-multiset a serving shard receives."""
+
+    OWNED_BACKENDS = ["numpy", "xla", "streaming"]
+
+    @pytest.mark.parametrize("backend", OWNED_BACKENDS)
+    def test_owned_slices_concat_to_full_z(self, backend):
+        from repro.graph.partition import RowPartition
+        g, Y = _cases()["weighted_directed"]
+        part = RowPartition(g.n, 3)
+        ref = _oracle(g, Y, 5)
+        routed = dict(part.route_graph(g))
+        for lo, hi in part.slices():
+            emb = Embedder(EncoderConfig(K=5, chunk_size=64,
+                                         row_partition=(lo, hi)),
+                           backend=backend)
+            emb.fit(g, Y)
+            assert emb.Z_.shape == (hi - lo, 5)       # O(n/p), not O(n)
+            np.testing.assert_allclose(emb.transform(), ref[lo:hi],
+                                       atol=1e-5)
+        for i, (lo, hi) in enumerate(part.slices()):
+            emb = Embedder(EncoderConfig(K=5, chunk_size=64,
+                                         row_partition=(lo, hi)),
+                           backend=backend)
+            emb.fit(routed[i], Y)          # what a serving shard gets
+            np.testing.assert_allclose(emb.transform(), ref[lo:hi],
+                                       atol=1e-5)
+
+    def test_owned_laplacian_from_full_graph(self):
+        """Laplacian degrees come from the graph as passed — the FULL
+        unpadded graph keeps the normalizer exact per slice."""
+        g, Y = _cases()["weighted_directed"]
+        ref = _oracle(g, Y, 5, laplacian=True)
+        emb = Embedder(EncoderConfig(K=5, laplacian=True,
+                                     row_partition=(30, 100)),
+                       backend="xla").fit(g, Y)
+        np.testing.assert_allclose(emb.transform(), ref[30:100],
+                                   atol=1e-4)
+
+    def test_owned_partial_fit_roundtrip(self):
+        g, Y = _cases()["weighted_directed"]
+        rng = np.random.default_rng(17)
+        emb = Embedder(EncoderConfig(K=5, row_partition=(40, 90)),
+                       backend="xla").fit(g, Y)
+        Z0 = emb.transform().copy()
+        d = Graph(rng.integers(0, g.n, 50).astype(np.int32),
+                  rng.integers(0, g.n, 50).astype(np.int32),
+                  rng.random(50, dtype=np.float32) + 0.5, g.n)
+        emb.partial_fit(d)
+        both = Graph(np.concatenate([g.u, d.u]),
+                     np.concatenate([g.v, d.v]),
+                     np.concatenate([g.w, d.w]), g.n)
+        np.testing.assert_allclose(emb.transform(),
+                                   _oracle(both, Y, 5)[40:90], atol=1e-4)
+        emb.partial_fit(d, sign=-1.0)
+        np.testing.assert_allclose(emb.transform(), Z0, atol=1e-4)
+        # a delta with no contribution into [lo, hi) is an exact no-op
+        out = Graph(np.array([0, 1], np.int32), np.array([2, 3], np.int32),
+                    np.ones(2, np.float32), g.n)
+        emb.partial_fit(out)
+        np.testing.assert_allclose(emb.transform(), Z0, atol=1e-4)
+
+    def test_global_node_ids_and_bounds(self):
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5, row_partition=(40, 90)),
+                       backend="xla").fit(g, Y)
+        ref = _oracle(g, Y, 5)
+        np.testing.assert_allclose(
+            emb.transform(np.array([40, 60, 89])),
+            ref[[40, 60, 89]], atol=1e-5)
+        with pytest.raises(IndexError, match="owned"):
+            emb.transform(np.array([39]))
+        with pytest.raises(IndexError, match="owned"):
+            emb.predict(np.array([90]))
+
+    def test_unsupported_backends_and_configs_rejected(self):
+        g, Y = _cases()["weighted_directed"]
+        for backend in ("pallas", "distributed:ring"):
+            emb = Embedder(EncoderConfig(K=5, row_partition=(0, 10),
+                                         **CFG), backend=backend)
+            with pytest.raises(ValueError, match="owned-rows"):
+                emb.plan(g)
+        with pytest.raises(ValueError, match="row_partition"):
+            EncoderConfig(K=5, row_partition=(10, 10))
+        with pytest.raises(ValueError, match="row_partition"):
+            EncoderConfig(K=5, row_partition=(-1, 10))
+        with pytest.raises(ValueError, match="exceeds"):
+            Embedder(EncoderConfig(K=5, row_partition=(0, g.n + 1)),
+                     backend="xla").plan(g)
+
+    def test_full_embedding_surfaces_guarded(self):
+        g, Y = _cases()["weighted_directed"]
+        emb = Embedder(EncoderConfig(K=5, row_partition=(0, 65)),
+                       backend="xla").fit(g, Y)
+        with pytest.raises(RuntimeError, match="owns only rows"):
+            emb.refine()
+        with pytest.raises(RuntimeError, match="owns only rows"):
+            emb.to_features(16)
+
+    def test_row_partition_keys_the_persistent_cache(self, tmp_path):
+        """Resharding must never hit a stale plan: the partition is
+        part of the tier-2 key, and same-partition replicas share."""
+        g, Y = _cases()["weighted_directed"]
+        a = Embedder(EncoderConfig(K=5, row_partition=(0, 65)),
+                     backend="xla", plan_cache=tmp_path)
+        a.fit(g, Y)
+        assert a.plan_stats["disk_stores"] == 1
+        b = Embedder(EncoderConfig(K=5, row_partition=(65, 130)),
+                     backend="xla", plan_cache=tmp_path)
+        b.fit(g, Y)                        # resharded: different key
+        assert b.plan_stats["disk_hits"] == 0
+        assert b.plan_stats["built"] == 1
+        c = Embedder(EncoderConfig(K=5, row_partition=(0, 65)),
+                     backend="xla", plan_cache=tmp_path)
+        c.fit(g, Y)                        # same partition: shared
+        assert c.plan_stats == {"built": 0, "hits": 0,
+                                "disk_hits": 1, "disk_stores": 0}
+        np.testing.assert_allclose(c.transform(),
+                                   _oracle(g, Y, 5)[:65], atol=1e-5)
+
+
 class TestAutoBackend:
     def test_policy_table_resolution(self):
         from repro.encoder import resolve_auto

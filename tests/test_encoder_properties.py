@@ -1,0 +1,119 @@
+"""Hypothesis property suite for the encoder: random small graphs x
+the in-process single-host backends.
+
+Properties:
+
+* **permutation invariance** — Z depends on the edge MULTISET, not the
+  edge order (plans and packings may differ; the answer may not);
+* **partial_fit(delta) == fit(base ++ delta)** — GEE linearity, the
+  serving delta path's exactness contract (plus sign=-1 as the exact
+  inverse);
+* **owned-rows concatenation** — fitting each slice of a random
+  `RowPartition` with `row_partition=(lo, hi)` and concatenating the
+  owned accumulators reproduces the unsharded Z, both from the full
+  graph and from the routed sub-multisets a serving shard receives.
+
+Runs only where hypothesis is installed (a dev dependency,
+requirements.txt); skipped otherwise, like tests/test_gee_core.py.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, assume, given, settings
+from hypothesis import strategies as st
+
+from repro.encoder import Embedder, EncoderConfig
+from repro.graph.edges import Graph
+from repro.graph.partition import RowPartition
+
+#: the in-process single-host backends — the owned-rows-capable set and
+#: the serving hot paths (pallas/distributed conformance lives in
+#: test_encoder.py with device-shaped fixed cases)
+BACKENDS = ("numpy", "xla", "streaming")
+
+#: tiny graphs, few examples: each example pays a jit compile per new
+#: (n, s, K) shape, so the budget goes to case diversity, not repeats
+SETTINGS = settings(max_examples=12, deadline=None,
+                    suppress_health_check=[HealthCheck.too_slow])
+
+
+@st.composite
+def graph_cases(draw):
+    """(Graph, Y, K): tiny random weighted digraph + partial labels
+    (self-loops, parallel edges, negative weights, unlabeled nodes all
+    reachable).  Sizes are drawn through hypothesis so shrinking
+    reduces n/s; array CONTENT comes from a drawn numpy seed —
+    hypothesis still controls reproducibility, numpy keeps generation
+    fast."""
+    n = draw(st.integers(min_value=2, max_value=24))
+    s = draw(st.integers(min_value=0, max_value=80))
+    K = draw(st.integers(min_value=1, max_value=5))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    r = np.random.default_rng(seed)
+    w = (r.uniform(0.25, 2.0, s)
+         * r.choice([1.0, -1.0], s, p=[0.85, 0.15]))
+    g = Graph(r.integers(0, n, s).astype(np.int32),
+              r.integers(0, n, s).astype(np.int32),
+              w.astype(np.float32), n)
+    Y = r.integers(-1, K, n).astype(np.int32)
+    return g, Y, K
+
+
+def _fit_Z(g, Y, K, backend, row_partition=None):
+    emb = Embedder(EncoderConfig(K=K, chunk_size=64,
+                                 row_partition=row_partition),
+                   backend=backend, plan_cache=None)
+    return np.asarray(emb.fit(g, Y).transform())
+
+
+@given(case=graph_cases(), backend=st.sampled_from(BACKENDS),
+       perm_seed=st.integers(0, 2**31 - 1))
+@SETTINGS
+def test_edge_multiset_permutation_invariance(case, backend, perm_seed):
+    g, Y, K = case
+    gp = g.permuted(np.random.default_rng(perm_seed))
+    np.testing.assert_allclose(_fit_Z(gp, Y, K, backend),
+                               _fit_Z(g, Y, K, backend), atol=1e-4)
+
+
+@given(case=graph_cases(), backend=st.sampled_from(BACKENDS),
+       cut_frac=st.floats(0.0, 1.0))
+@SETTINGS
+def test_partial_fit_equals_full_fit(case, backend, cut_frac):
+    g, Y, K = case
+    cut = int(round(cut_frac * g.s))
+    base = Graph(g.u[:cut], g.v[:cut], g.w[:cut], g.n)
+    delta = Graph(g.u[cut:], g.v[cut:], g.w[cut:], g.n)
+    emb = Embedder(EncoderConfig(K=K, chunk_size=64), backend=backend,
+                   plan_cache=None).fit(base, Y)
+    Z_base = np.asarray(emb.transform()).copy()
+    emb.partial_fit(delta)
+    np.testing.assert_allclose(np.asarray(emb.transform()),
+                               _fit_Z(g, Y, K, backend), atol=1e-4)
+    emb.partial_fit(delta, sign=-1.0)    # deletion: the exact inverse
+    np.testing.assert_allclose(np.asarray(emb.transform()), Z_base,
+                               atol=1e-4)
+
+
+@given(case=graph_cases(), backend=st.sampled_from(BACKENDS),
+       p=st.integers(1, 5), routed=st.booleans())
+@SETTINGS
+def test_owned_rows_concat_equals_unsharded(case, backend, p, routed):
+    g, Y, K = case
+    try:
+        part = RowPartition(g.n, min(p, g.n))
+    except ValueError:       # ceil-stride layout empties the last shard
+        assume(False)
+    full = _fit_Z(g, Y, K, backend)
+    subs = dict(part.route_graph(g)) if routed else None
+    parts = []
+    for i, (lo, hi) in enumerate(part.slices()):
+        sub = g if subs is None else subs.get(
+            i, Graph(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                     np.zeros(0, np.float32), g.n))
+        Z = _fit_Z(sub, Y, K, backend, row_partition=(lo, hi))
+        assert Z.shape == (hi - lo, K)
+        parts.append(Z)
+    np.testing.assert_allclose(np.concatenate(parts, 0), full,
+                               atol=1e-4)

@@ -17,6 +17,8 @@ from pathlib import Path
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow          # persistent plan-cache tier (subprocess hits)
+
 import repro
 from repro.core.ref_python import gee_numpy
 from repro.encoder import Embedder, EncoderConfig, get_backend
@@ -62,7 +64,6 @@ def _run_child(snapshot: str, cache_dir: str) -> dict:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
-@pytest.mark.slow
 def test_second_process_gets_persistent_hit(tmp_path):
     g = erdos_renyi(130, 700, seed=2, weighted=True)
     snap = str(tmp_path / "g.npz")

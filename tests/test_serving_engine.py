@@ -2,7 +2,10 @@
 crash recovery (the acceptance contract: replaying WAL onto the last
 snapshot reconstructs the exact (version, epoch, fingerprint) state and
 a Z equal to a fresh `gee_streaming` rebuild), sharded scatter/gather
-query equivalence for N in {1, 2, 4}, and the async flush loop."""
+query equivalence for N in {1, 2, 4, 8} over owned-rows-only shard
+accumulators, and the async flush loop.  RNG comes from conftest's
+`rng` fixture; top-k comparisons use the shared tie-tolerant
+`assert_topk_equivalent`."""
 import os
 import time
 
@@ -17,6 +20,8 @@ from repro.graph.partition import RowPartition
 from repro.serving import (GraphStore, MicroBatcher, ServingEngine,
                            WriteAheadLog)
 from repro.serving import wal as W
+
+SHARD_COUNTS = (1, 2, 4, 8)
 
 
 def _mkstore(n=240, s=2400, K=5, seed=0, frac=0.4):
@@ -151,28 +156,19 @@ class TestWal:
             WriteAheadLog(str(path)).open()
 
 
-def _assert_topk_equiv(idx_a, val_a, idx_b, val_b, atol=1e-5):
-    """Top-k equality modulo ties: scores must match; where indices
-    differ, the corresponding scores must be within tolerance."""
-    np.testing.assert_allclose(val_a, val_b, atol=atol)
-    diff = idx_a != idx_b
-    if diff.any():
-        np.testing.assert_allclose(val_a[diff], val_b[diff], atol=atol)
-
-
 class TestShardedEquivalence:
-    """Acceptance: sharded scatter/gather answers for N in {1, 2, 4}
-    equal the single-shard answers on randomized graphs."""
+    """Acceptance: sharded scatter/gather answers for N in {1, 2, 4, 8}
+    equal the single-shard answers on randomized graphs — with every
+    proper sub-range shard holding an owned-rows-only accumulator."""
 
     @pytest.mark.parametrize("seed", [0, 1])
-    def test_queries_match_single_shard(self, seed):
-        rng = np.random.default_rng(100 + seed)
+    def test_queries_match_single_shard(self, seed, rng,
+                                        assert_topk_equivalent):
         engines = {p: ServingEngine(_mkstore(seed=seed), num_shards=p)
-                   for p in (1, 2, 4)}
+                   for p in SHARD_COUNTS}
         # mutate every deployment identically: inserts, deletes, labels
         for step in range(4):
-            batch = _rand_batch(np.random.default_rng(7 * seed + step),
-                                240, 60 + step)
+            batch = _rand_batch(rng, 240, 60 + step)
             for e in engines.values():
                 e.apply_edge_delta(*batch)
             if step == 2:
@@ -183,7 +179,7 @@ class TestShardedEquivalence:
         rows_ref = ref.query_embed(nodes)
         pred_ref, score_ref = ref.query_predict(nodes)
         idx_ref, val_ref = ref.query_topk(nodes, k=7, block_rows=32)
-        for p in (2, 4):
+        for p in SHARD_COUNTS[1:]:
             e = engines[p]
             assert e.stats()["num_shards"] == p
             np.testing.assert_allclose(e.query_embed(nodes), rows_ref,
@@ -194,20 +190,36 @@ class TestShardedEquivalence:
             np.testing.assert_array_equal(pred, pred_ref)
             np.testing.assert_allclose(score, score_ref, atol=1e-5)
             idx, val = e.query_topk(nodes, k=7, block_rows=32)
-            _assert_topk_equiv(idx, val, idx_ref, val_ref)
+            assert_topk_equivalent(idx, val, idx_ref, val_ref)
 
-    def test_rebuild_on_label_churn_stays_equivalent(self):
-        truth = np.random.default_rng(3).integers(0, 5, 240,
-                                                  dtype=np.int32)
+    def test_shard_accumulators_are_owned_rows_only(self):
+        """The tentpole memory contract: a p-shard engine's per-shard
+        accumulator is (n_k, K) — O(n/p) — not the full (n, K), and
+        stats() reports the bytes so the bench can chart it."""
+        for p in SHARD_COUNTS:
+            eng = ServingEngine(_mkstore(seed=2), num_shards=p)
+            for shard in eng.shards:
+                lo, hi = shard.lo, shard.hi
+                assert shard.owned_only == (p > 1)
+                want_rows = (hi - lo) if p > 1 else 240
+                assert shard.embedder.Z_.shape == (want_rows, 5)
+            stats = eng.stats()
+            peak = stats["peak_shard_accumulator_bytes"]
+            assert peak == max(stats["shard_accumulator_bytes"])
+            assert peak == -(-240 // p) * 5 * 4     # ceil(n/p)*K*4
+            assert eng.Z.shape == (240, 5)
+
+    def test_rebuild_on_label_churn_stays_equivalent(self, rng):
+        truth = rng.integers(0, 5, 240, dtype=np.int32)
         engines = {p: ServingEngine(_mkstore(seed=3), num_shards=p,
                                     rebuild_churn=0.1)
-                   for p in (1, 2, 4)}
+                   for p in SHARD_COUNTS}
         many = np.arange(240 // 3)
         for e in engines.values():
             e.apply_label_delta(many, truth[many])
             assert e.epoch == 2           # threshold crossed everywhere
         ref = np.asarray(engines[1].Z)
-        for p in (2, 4):
+        for p in SHARD_COUNTS[1:]:
             np.testing.assert_allclose(np.asarray(engines[p].Z), ref,
                                        atol=1e-5)
 
@@ -218,8 +230,7 @@ class TestShardedEquivalence:
         for i, q in enumerate(nodes):
             assert q not in idx[i]
 
-    def test_batcher_runs_over_sharded_engine(self):
-        rng = np.random.default_rng(11)
+    def test_batcher_runs_over_sharded_engine(self, rng):
         eng = ServingEngine(_mkstore(seed=11), num_shards=3)
         mb = MicroBatcher(eng, topk=4, topk_block_rows=64)
         pre = mb.submit("embed", rng.integers(0, 240, 8))
@@ -233,6 +244,7 @@ class TestShardedEquivalence:
             atol=1e-6)
 
 
+@pytest.mark.slow
 class TestCrashRecovery:
     """Acceptance: kill an engine mid-stream after K applied deltas,
     restart from WAL+snapshot, and the recovered Z equals a fresh
@@ -240,9 +252,8 @@ class TestCrashRecovery:
     (version, epoch, fingerprint) match."""
 
     @pytest.mark.parametrize("num_shards", [1, 2])
-    def test_recovery_reconstructs_exact_state(self, tmp_path,
+    def test_recovery_reconstructs_exact_state(self, tmp_path, rng,
                                                num_shards):
-        rng = np.random.default_rng(40 + num_shards)
         truth = rng.integers(0, 5, 240, dtype=np.int32)
         eng = ServingEngine(_mkstore(seed=8), num_shards=num_shards,
                             data_dir=str(tmp_path / "dep"),
@@ -279,9 +290,9 @@ class TestCrashRecovery:
         np.testing.assert_allclose(np.asarray(rec.Z), Z_live, atol=1e-3)
         rec.close()
 
-    def test_checkpoint_rotates_generation_and_recovers(self, tmp_path):
+    def test_checkpoint_rotates_generation_and_recovers(self, tmp_path,
+                                                       rng):
         d = str(tmp_path / "dep")
-        rng = np.random.default_rng(77)
         eng = ServingEngine(_mkstore(seed=9), num_shards=2, data_dir=d)
         eng.apply_edge_delta(*_rand_batch(rng, 240, 50))
         info = eng.checkpoint()
@@ -295,9 +306,8 @@ class TestCrashRecovery:
         assert (rec.version, rec.epoch, rec.fingerprint()) == triple
         rec.close()
 
-    def test_compact_and_refresh_markers_replay(self, tmp_path):
+    def test_compact_and_refresh_markers_replay(self, tmp_path, rng):
         d = str(tmp_path / "dep")
-        rng = np.random.default_rng(13)
         eng = ServingEngine(_mkstore(seed=13), data_dir=d)
         eng.apply_edge_delta(*_rand_batch(rng, 240, 40))
         eng.compact()                    # volatile compaction, marker
@@ -309,10 +319,9 @@ class TestCrashRecovery:
         assert rec.rebuilds == eng.rebuilds
         rec.close()
 
-    def test_torn_wal_tail_recovers_prefix(self, tmp_path):
+    def test_torn_wal_tail_recovers_prefix(self, tmp_path, rng):
         d = str(tmp_path / "dep")
         eng = ServingEngine(_mkstore(seed=21), data_dir=d)
-        rng = np.random.default_rng(21)
         eng.apply_edge_delta(*_rand_batch(rng, 240, 25))
         triple = (eng.version, eng.epoch, eng.fingerprint())
         wal_path = os.path.join(d, "wal-0.log")
@@ -332,13 +341,12 @@ class TestCrashRecovery:
         with pytest.raises(FileNotFoundError):
             ServingEngine.open(str(tmp_path / "nope"))
 
-    def test_recovered_replica_shares_plan_cache(self, tmp_path):
+    def test_recovered_replica_shares_plan_cache(self, tmp_path, rng):
         """A recovered sharded engine's rebuild must be a persistent
         plan-cache hit: the chained per-shard fingerprints replay to
         the same values the crashed process stored under."""
         d = str(tmp_path / "dep")
         cache = str(tmp_path / "plans")
-        rng = np.random.default_rng(31)
         eng = ServingEngine(_mkstore(seed=31), num_shards=2,
                             data_dir=d, plan_cache=cache)
         eng.apply_edge_delta(*_rand_batch(rng, 240, 30))
@@ -354,8 +362,7 @@ class TestCrashRecovery:
 
 
 class TestAsyncLoop:
-    def test_background_flush_serves_submitters(self):
-        rng = np.random.default_rng(55)
+    def test_background_flush_serves_submitters(self, rng):
         eng = ServingEngine(_mkstore(seed=55), num_shards=2)
         mb = eng.start(interval=1e-3)
         try:
@@ -379,8 +386,8 @@ class TestAsyncLoop:
             eng.start()
         eng.stop()
 
-    def test_auto_checkpoint_when_wal_outgrows_budget(self, tmp_path):
-        rng = np.random.default_rng(66)
+    def test_auto_checkpoint_when_wal_outgrows_budget(self, tmp_path,
+                                                      rng):
         eng = ServingEngine(_mkstore(seed=66), data_dir=str(tmp_path),
                             num_shards=2)
         mb = eng.start(interval=1e-3, checkpoint_bytes=64)
@@ -399,13 +406,12 @@ class TestAsyncLoop:
         with pytest.raises(RuntimeError):
             eng.checkpoint()
 
-    def test_loop_survives_checkpoint_failure(self, tmp_path,
+    def test_loop_survives_checkpoint_failure(self, tmp_path, rng,
                                               monkeypatch):
         """An engine-level failure in the background consumer (e.g. a
         checkpoint hitting a full disk) must not kill the thread: the
         error is recorded, auto-checkpointing stops, and submitters
         keep being served."""
-        rng = np.random.default_rng(88)
         eng = ServingEngine(_mkstore(seed=88), data_dir=str(tmp_path))
         boom = OSError("disk full")
 
