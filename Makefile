@@ -3,7 +3,7 @@ PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-slow lint install install-dev serve-demo \
-	bench-serving bench-encoder bench-smoke
+	bench-serving bench-encoder bench-smoke obs-gate obs-snapshot
 
 # Tier-1 verify: the whole suite, fail-fast.
 test:
@@ -51,8 +51,19 @@ bench-serving:
 bench-encoder:
 	$(PY) -m benchmarks.run --only encoder
 
-# CI rot canary: every benchmark driver end-to-end on tiny graphs.
+# CI rot canary: every benchmark driver end-to-end on tiny graphs,
+# then the observability overhead gate (instrumented fit within 3% of
+# REPRO_OBS=off, and the disabled path a functional no-op).
 # (fig3 spawns a device-sweep subprocess matrix and roofline needs
 # dry-run artifacts; both have their own entry points.)
 bench-smoke:
 	$(PY) -m benchmarks.run --quick --only table1,fig4,kernels,encoder,serving
+	$(PY) -m benchmarks.obs_gate --quick
+
+# The obs overhead gate alone, at full size.
+obs-gate:
+	$(PY) -m benchmarks.obs_gate
+
+# Live registry snapshot off a tiny end-to-end serving demo.
+obs-snapshot:
+	$(PY) -m repro.obs --snapshot

@@ -1,10 +1,20 @@
-"""Shared benchmark utilities: timing, CSV emission, quick mode."""
+"""Shared benchmark utilities: timing, CSV emission, quick mode.
+
+Every `emit()` row is mirrored into the process metrics registry as a
+``repro_bench_<slug>_us`` gauge (`repro.obs`), so bench results share
+the export surfaces (snapshot / Prometheus) with the live series and
+the harness can validate row names against the repo-wide metric naming
+scheme instead of free-form CSV strings.
+"""
 from __future__ import annotations
 
+import re
 import time
 from typing import Callable
 
 import jax
+
+from repro import obs
 
 #: set by `benchmarks.run --quick` (the `make bench-smoke` CI path):
 #: suites shrink to tiny graphs so every driver is exercised end-to-end
@@ -41,7 +51,18 @@ def time_it(fn: Callable, *args, warmup: int = 1, iters: int = 3,
     return ts[len(ts) // 2]
 
 
+def metric_name(name: str) -> str:
+    """Registry series name for a bench row: ``repro_bench_<slug>_us``
+    (lowercase, every non-[a-z0-9] run collapsed to one underscore) —
+    guaranteed to satisfy `obs.valid_metric_name` for any non-empty
+    row name."""
+    slug = re.sub(r"[^a-z0-9]+", "_", name.lower()).strip("_")
+    return f"repro_bench_{slug or 'row'}_us"
+
+
 def emit(name: str, seconds: float, derived: str = "") -> None:
-    """name,us_per_call,derived CSV row (the harness contract)."""
+    """name,us_per_call,derived CSV row (the harness contract); also
+    lands in the metrics registry as a ``repro_bench_*_us`` gauge."""
     EMITTED.append(name)
+    obs.gauge(metric_name(name), seconds * 1e6)
     print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -39,18 +39,38 @@ SUITES = {
 
 
 def _check_schema(suite: str, module) -> None:
-    """Every key the driver declares must have been emitted."""
+    """Every key the driver declares must have been emitted, must map
+    to a scheme-conformant registry name (``repro_bench_*_us``), and —
+    when the obs layer is live — must actually be present in the
+    registry (emit() mirrors every row there)."""
     from benchmarks import common
+    from repro import obs
     expected_keys = getattr(module, "expected_keys", None)
     if expected_keys is None:
         return
+    expected = list(expected_keys())
     emitted = set(common.EMITTED)
-    missing = [k for k in expected_keys() if k not in emitted]
+    missing = [k for k in expected if k not in emitted]
     if missing:
         raise RuntimeError(
             f"suite {suite!r} finished without emitting expected "
             f"result keys {missing} — a silently-empty benchmark is a "
             "failure, not a pass")
+    bad = [k for k in expected
+           if not obs.valid_metric_name(common.metric_name(k))]
+    if bad:
+        raise RuntimeError(
+            f"suite {suite!r} declares row names {bad} that do not map "
+            "onto the repro_<subsystem>_<metric> registry scheme")
+    if obs.enabled():
+        gauges = obs.snapshot(prefix="repro_bench")["gauges"]
+        names = {g.split("{")[0] for g in gauges}
+        lost = [k for k in expected
+                if common.metric_name(k) not in names]
+        if lost:
+            raise RuntimeError(
+                f"suite {suite!r} rows {lost} never reached the "
+                "metrics registry — emit() and the registry disagree")
 
 
 def main() -> None:

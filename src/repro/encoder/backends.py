@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.encoder.config import EncoderConfig
 from repro.encoder.plan import Plan, effective_weights, owned_contributions
 from repro.graph.edges import Graph
@@ -139,6 +140,19 @@ class Backend:
               ) -> Tuple[jnp.ndarray, dict]:
         """Return (Z (n, K) float32, info dict)."""
         raise NotImplementedError
+
+    def _record_kernel(self, plan: Plan, Z, t0: float) -> None:
+        """Kernel-level throughput telemetry (obs-on only): fence the
+        result so the async dispatch is billed here, then export
+        achieved edges/s — the paper's own unit — as a gauge plus the
+        wall-time histogram."""
+        jax.block_until_ready(Z)
+        dt = obs.tock(t0)
+        obs.observe("repro_kernel_embed_seconds", dt,
+                    backend=self.name)
+        if plan.s and dt > 0:
+            obs.gauge("repro_kernel_edges_per_s", plan.s / dt,
+                      backend=self.name)
 
 
 def _owned_plan_host(graph: Graph, config: EncoderConfig,
@@ -259,13 +273,17 @@ class PallasBackend(Backend):
     def embed(self, plan, Yj, Wv):
         from repro.kernels.gee_scatter import gee_scatter_pallas
         d, cfg = plan.data, plan.config
+        t0 = obs.tick()
         Ys = Yj[d["src"]]
         cls = jnp.maximum(Ys, 0)
         val = jnp.where(Ys >= 0, Wv[d["src"]] * d["w"], 0.0)
         Z = gee_scatter_pallas(d["rows"], cls, val, num_tiles=d["T"],
                                tile_n=cfg.tile_n, kdim=d["kdim"],
                                interpret=cfg.interpret)
-        return Z[:plan.n, :cfg.K], {}
+        Z = Z[:plan.n, :cfg.K]
+        if obs.enabled():
+            self._record_kernel(plan, Z, t0)
+        return Z, {}
 
 
 @register_backend("streaming")
@@ -311,16 +329,19 @@ class StreamingBackend(Backend):
     def embed(self, plan, Yj, Wv):
         from repro.core.gee import gee_streaming, gee_streaming_owned
         cfg = plan.config
+        t0 = obs.tick()
         if cfg.row_partition is not None:
             Z = gee_streaming_owned(
                 ((jnp.asarray(r), jnp.asarray(s), jnp.asarray(w))
                  for (r, s, w) in plan.data["chunks"]),
                 Yj, K=cfg.K, n_local=plan.n_local, Wv=Wv)
-            return Z, {"chunks": len(plan.data["chunks"])}
-        Z = gee_streaming(
-            ((jnp.asarray(u), jnp.asarray(v), jnp.asarray(w))
-             for (u, v, w) in plan.data["chunks"]),
-            Yj, K=cfg.K, n=plan.n, Wv=Wv)
+        else:
+            Z = gee_streaming(
+                ((jnp.asarray(u), jnp.asarray(v), jnp.asarray(w))
+                 for (u, v, w) in plan.data["chunks"]),
+                Yj, K=cfg.K, n=plan.n, Wv=Wv)
+        if obs.enabled():
+            self._record_kernel(plan, Z, t0)
         return Z, {"chunks": len(plan.data["chunks"])}
 
 

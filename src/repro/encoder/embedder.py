@@ -38,6 +38,7 @@ import numpy as np
 
 import functools
 
+from repro import obs
 from repro.core.gee import (gee_apply_delta, gee_apply_delta_owned,
                             kmeans_refine_round, make_w)
 from repro.encoder.backends import Backend, get_backend, resolve_auto
@@ -95,6 +96,16 @@ class Embedder:
         self.plan_stats = {"built": 0, "hits": 0,
                            "disk_hits": 0, "disk_stores": 0}
 
+    def _bump_plan_stat(self, key: str) -> None:
+        """plan_stats increment, mirrored into the process registry
+        (`repro_encoder_plan_cache_total{event=...}`) so every
+        Embedder's cache behavior lands in one observable series."""
+        self.plan_stats[key] += 1
+        obs.counter("repro_encoder_plan_cache_total",
+                    event={"hits": "tier1_hit", "built": "built",
+                           "disk_hits": "disk_hit",
+                           "disk_stores": "disk_store"}[key])
+
     # -- planning ----------------------------------------------------------
 
     def _resolve_backend(self, graph: Graph) -> Backend:
@@ -134,7 +145,7 @@ class Embedder:
                     f"row_partition {rp} exceeds graph n={graph.n}")
         if self._plan is not None and self._plan.matches(
                 graph, backend.name, self.config):
-            self.plan_stats["hits"] += 1
+            self._bump_plan_stat("hits")
             return self._plan
         graph.validate()
         if self.Z_ is not None:
@@ -145,21 +156,31 @@ class Embedder:
             self._Yj = self._Yfit = None
             self._deltas_applied = 0
             self.last_info_ = {}
-        meta = host = None
-        cache = self.plan_cache if backend.persistable else None
-        if cache is not None:
-            meta = cache.describe(graph.fingerprint(), backend,
-                                  self.config, mesh=self.mesh)
-            host = cache.load(meta)
-        if host is not None:
-            self.plan_stats["disk_hits"] += 1
-            self._plan = backend.plan(graph, self.config, mesh=self.mesh,
-                                      host=host)
-        else:
-            self._plan = backend.plan(graph, self.config, mesh=self.mesh)
-            self.plan_stats["built"] += 1
-            if meta is not None and cache.store(meta, self._plan.host):
-                self.plan_stats["disk_stores"] += 1
+        with obs.span("encoder.plan", backend=backend.name,
+                      n=graph.n, s=graph.s) as sp:
+            meta = host = None
+            cache = self.plan_cache if backend.persistable else None
+            if cache is not None:
+                meta = cache.describe(graph.fingerprint(), backend,
+                                      self.config, mesh=self.mesh)
+                host = cache.load(meta)
+            if host is not None:
+                self._bump_plan_stat("disk_hits")
+                self._plan = backend.plan(graph, self.config,
+                                          mesh=self.mesh, host=host)
+                source = "disk"
+            else:
+                self._plan = backend.plan(graph, self.config,
+                                          mesh=self.mesh)
+                self._bump_plan_stat("built")
+                if meta is not None and cache.store(meta,
+                                                    self._plan.host):
+                    self._bump_plan_stat("disk_stores")
+                source = "built"
+            sp.set(source=source)
+        if obs.enabled():
+            obs.observe("repro_encoder_plan_seconds", sp.duration,
+                        backend=backend.name, source=source)
         return self._plan
 
     # -- fitting -----------------------------------------------------------
@@ -183,7 +204,7 @@ class Embedder:
                 "refit() requires a fitted state for the cached plan "
                 "(fit() first; a plan() on a different graph clears it)")
         self._check_no_pending_deltas("refit")
-        self.plan_stats["hits"] += 1
+        self._bump_plan_stat("hits")
         return self._embed(self._plan, self.labels_ if Y is None else Y)
 
     def _check_no_pending_deltas(self, what: str) -> None:
@@ -201,11 +222,20 @@ class Embedder:
         if Y.size and Y.max() >= self.config.K:
             raise ValueError(f"label {Y.max()} >= K={self.config.K}")
         self.labels_ = Y.copy()
-        self._Yj = jnp.asarray(Y)
-        self._Yfit = self._Yj       # supervised set: pinned by refine()
-        self.Wv_ = make_w(self._Yj, self.config.K)
-        self.Z_, self.last_info_ = self.backend.embed(plan, self._Yj,
-                                                      self.Wv_)
+        with obs.span("encoder.fit",
+                      metric="repro_encoder_fit_seconds",
+                      mlabels={"backend": self.backend.name},
+                      backend=self.backend.name, n=plan.n,
+                      s=plan.s) as sp:
+            self._Yj = jnp.asarray(Y)
+            self._Yfit = self._Yj   # supervised set: pinned by refine()
+            self.Wv_ = make_w(self._Yj, self.config.K)
+            self.Z_, self.last_info_ = self.backend.embed(plan, self._Yj,
+                                                          self.Wv_)
+            sp.fence(self.Z_)       # bill the async scatter to the fit
+        if obs.enabled() and plan.s and sp.duration > 0:
+            obs.gauge("repro_encoder_fit_edges_per_s",
+                      plan.s / sp.duration, backend=self.backend.name)
         self._deltas_applied = 0
         return self
 
@@ -229,6 +259,7 @@ class Embedder:
         delta.validate()
         if delta.s == 0:
             return self
+        t0 = obs.tick()
         rp = self.config.row_partition
         if rp is not None:
             # owned-rows path: bucket the delta by owned destination on
@@ -249,6 +280,7 @@ class Embedder:
                 jnp.asarray(w), self._Yj, self.Wv_, K=self.config.K,
                 sign=sign)
             self._deltas_applied += 1
+            self._record_partial_fit(t0, delta.s)
             return self
         padded = delta.pad_to(bucket_size(delta.s))
         self.Z_ = gee_apply_delta(
@@ -256,7 +288,18 @@ class Embedder:
             jnp.asarray(padded.w), self._Yj, self.Wv_,
             K=self.config.K, sign=sign)
         self._deltas_applied += 1
+        self._record_partial_fit(t0, delta.s)
         return self
+
+    def _record_partial_fit(self, t0: float, s: int) -> None:
+        """Registry metrics for one applied delta (obs-on only: the
+        fence synchronizes device work so the latency is real)."""
+        if not obs.enabled():
+            return
+        jax.block_until_ready(self.Z_)
+        obs.observe("repro_encoder_partial_fit_seconds", obs.tock(t0),
+                    backend=self.backend.name)
+        obs.counter("repro_encoder_delta_edges_total", s)
 
     # -- refinement --------------------------------------------------------
 
@@ -276,23 +319,29 @@ class Embedder:
         self._check_no_pending_deltas("refine")
         key = jax.random.PRNGKey(0) if key is None else key
         cfg = self.config
-        # pin only the labels SUPERVISED at fit time — not a previous
-        # refine()'s assignments, so repeated refines re-bootstrap the
-        # unknowns instead of freezing on round one's clustering
-        Y0 = self._Yfit
-        rand = jax.random.randint(key, (self._plan.n,), 0, cfg.K,
-                                  jnp.int32)
-        labels = jnp.where(Y0 >= 0, Y0, rand)
-        for _ in range(cfg.refine_iters):
-            Z, _ = self.backend.embed(self._plan, labels,
-                                      make_w(labels, cfg.K))
-            labels = _kmeans_reassign(Z, labels, Y0, K=cfg.K,
-                                      kmeans_iters=cfg.kmeans_iters)
-        self.labels_ = np.asarray(labels)
-        self._Yj = labels
-        self.Wv_ = make_w(labels, cfg.K)
-        self.Z_, self.last_info_ = self.backend.embed(self._plan, labels,
-                                                      self.Wv_)
+        with obs.span("encoder.refine",
+                      metric="repro_encoder_refine_seconds",
+                      backend=self.backend.name,
+                      iters=cfg.refine_iters) as sp:
+            # pin only the labels SUPERVISED at fit time — not a
+            # previous refine()'s assignments, so repeated refines
+            # re-bootstrap the unknowns instead of freezing on round
+            # one's clustering
+            Y0 = self._Yfit
+            rand = jax.random.randint(key, (self._plan.n,), 0, cfg.K,
+                                      jnp.int32)
+            labels = jnp.where(Y0 >= 0, Y0, rand)
+            for _ in range(cfg.refine_iters):
+                Z, _ = self.backend.embed(self._plan, labels,
+                                          make_w(labels, cfg.K))
+                labels = _kmeans_reassign(Z, labels, Y0, K=cfg.K,
+                                          kmeans_iters=cfg.kmeans_iters)
+            self.labels_ = np.asarray(labels)
+            self._Yj = labels
+            self.Wv_ = make_w(labels, cfg.K)
+            self.Z_, self.last_info_ = self.backend.embed(
+                self._plan, labels, self.Wv_)
+            sp.fence(self.Z_)
         return self
 
     # -- queries -----------------------------------------------------------
@@ -331,8 +380,13 @@ class Embedder:
         """Z rows for `nodes` (all fitted rows if None — the owned
         block under a row partition), in config.dtype.  Node ids are
         always GLOBAL."""
+        t0 = obs.tick()
         Z = self._rows(nodes)
-        return np.asarray(Z.astype(jnp.dtype(self.config.dtype)))
+        out = np.asarray(Z.astype(jnp.dtype(self.config.dtype)))
+        if obs.enabled():
+            obs.observe("repro_encoder_transform_seconds",
+                        obs.tock(t0))
+        return out
 
     def predict(self, nodes=None) -> np.ndarray:
         """argmax-Z class prediction for `nodes` (all fitted nodes if

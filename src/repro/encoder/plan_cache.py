@@ -55,6 +55,8 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro import obs
+
 FORMAT_VERSION = 1
 _META_KEY = "__meta__"
 _OFF_VALUES = ("", "0", "off", "none", "disable", "disabled")
@@ -121,6 +123,8 @@ class PlanDiskCache:
             with np.load(path, allow_pickle=False) as d:
                 stored = json.loads(str(d[_META_KEY][()]))
                 if stored != meta:
+                    obs.counter("repro_encoder_plan_cache_total",
+                                event="stale")
                     return None                       # stale / collision
                 host = {k: d[k] for k in d.files if k != _META_KEY}
             try:
@@ -129,6 +133,8 @@ class PlanDiskCache:
                 pass
             return host
         except Exception:
+            obs.counter("repro_encoder_plan_cache_total",
+                        event="corrupt")
             try:
                 path.unlink()
             except OSError:
@@ -191,6 +197,9 @@ class PlanDiskCache:
             except OSError:
                 pass
             total -= size
+        if removed:
+            obs.counter("repro_encoder_plan_cache_total", removed,
+                        event="evict")
         return removed
 
     def stats(self) -> Dict[str, Any]:

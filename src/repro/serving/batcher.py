@@ -40,6 +40,7 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.graph.edges import bucket_size
 
 READ_KINDS = ("embed", "predict", "topk")
@@ -107,6 +108,7 @@ class MicroBatcher:
         with self._lock:
             self._queue.append(t)
             self._stats[kind].requests += 1
+        obs.counter("repro_serving_batcher_requests_total", kind=kind)
         return t
 
     # -- consumer side -----------------------------------------------------
@@ -146,6 +148,16 @@ class MicroBatcher:
             st.wall += t.latency
             if error is not None:
                 st.errors += 1
+        # EVERY ticket — reads AND write barriers — lands in the same
+        # per-kind latency histogram, so the distribution's count equals
+        # the submit count (tested; write barriers used to be invisible
+        # in latency summaries)
+        if obs.enabled():
+            obs.observe("repro_serving_batcher_ticket_seconds",
+                        t.latency, kind=t.kind)
+            if error is not None:
+                obs.counter("repro_serving_batcher_errors_total",
+                            kind=t.kind)
         t.done.set()
 
     def _count_batch(self, kind: str, items: int, exec_s: float) -> None:
@@ -154,6 +166,15 @@ class MicroBatcher:
             st.batches += 1
             st.items += items
             st.exec_wall += exec_s
+        if obs.enabled():
+            obs.counter("repro_serving_batcher_batches_total", kind=kind)
+            if items:
+                obs.counter("repro_serving_batcher_items_total", items,
+                            kind=kind)
+                obs.observe("repro_serving_batcher_batch_items", items,
+                            kind=kind)
+            obs.observe("repro_serving_batcher_exec_seconds", exec_s,
+                        kind=kind)
 
     def _run_write(self, t: Ticket) -> int:
         t0 = time.perf_counter()

@@ -40,11 +40,15 @@ from __future__ import annotations
 import json
 import os
 import threading
+import time
 from typing import Optional, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+from repro.obs.health import DEGRADED, SERVING, STARTING, HealthTracker
 from repro.graph.edges import Graph, edge_fingerprint, extend_fingerprint
 from repro.graph.partition import RowPartition
 from repro.graph.sources import StoreSource
@@ -77,11 +81,17 @@ class ServingEngine:
                  num_shards: int = 1, rebuild_churn: float = 0.05,
                  chunk_size: int = 1 << 20, backend: str = "streaming",
                  plan_cache: Union[str, None] = "auto",
-                 fsync: bool = False, _boot: bool = True):
+                 fsync: bool = False, degraded_append_s: float = 0.5,
+                 _boot: bool = True):
         self.store = store
         self.source = StoreSource(store)
         self.rebuild_churn = float(rebuild_churn)
         self.fsync = bool(fsync)
+        #: WAL append (write+flush[+fsync]) latency past this marks the
+        #: deployment `degraded` in health() — the disk is the write
+        #: path's throughput ceiling, so a slow append IS an incident
+        self.degraded_append_s = float(degraded_append_s)
+        self._health = HealthTracker("serving")
         self.partition = RowPartition(store.n, num_shards)
         # n=store.n turns every proper sub-range shard into an
         # owned-rows Embedder (row_partition): the accumulator is
@@ -126,6 +136,7 @@ class ServingEngine:
             self._reset_shard_fps()
             self._rebuild()
             self._write_generation(0)
+        self._health.to(SERVING)        # boot complete: starting -> serving
 
     # -- recovery ----------------------------------------------------------
 
@@ -134,40 +145,59 @@ class ServingEngine:
              rebuild_churn: Optional[float] = None,
              chunk_size: int = 1 << 20, backend: str = "streaming",
              plan_cache: Union[str, None] = "auto",
-             fsync: bool = False) -> "ServingEngine":
+             fsync: bool = False,
+             degraded_append_s: float = 0.5) -> "ServingEngine":
         """Recover a deployment: load the manifest's snapshot, replay
         the WAL suffix (append-before-apply means every applied
         mutation is there), and rebuild Z once at the end.  The
         recovered `(version, epoch, fingerprint)` triple — and the
-        epoch's label snapshot — exactly match the crashed process."""
+        epoch's label snapshot — exactly match the crashed process.
+
+        The whole open is one ``serving.recovery`` span and lands in
+        the ``repro_serving_recovery_seconds`` histogram (health is
+        ``starting`` until the final rebuild completes)."""
         data_dir = str(data_dir)
-        with open(os.path.join(data_dir, _MANIFEST)) as f:
-            gen = int(json.load(f)["generation"])
-        prefix = os.path.join(data_dir, f"snap-{gen}")
-        store = GraphStore.load(prefix)
-        with open(prefix + ".engine.json") as f:
-            emeta = json.load(f)
-        eng = cls(store,
-                  num_shards=(num_shards if num_shards is not None
-                              else int(emeta["num_shards"])),
-                  rebuild_churn=(rebuild_churn if rebuild_churn is not None
-                                 else float(emeta["rebuild_churn"])),
-                  chunk_size=chunk_size, backend=backend,
-                  plan_cache=plan_cache, fsync=fsync, _boot=False)
-        eng.data_dir = data_dir
-        eng.generation = gen
-        eng.epoch = int(emeta["epoch"])
-        eng.rebuilds = int(emeta["rebuilds"])
-        eng.deltas_applied = int(emeta["deltas_applied"])
-        eng.checkpoints = int(emeta.get("checkpoints", 0))
-        eng.Y_epoch = store.Y.copy()     # a snapshot always post-rebuild
-        eng._reset_shard_fps()
-        eng.wal = WriteAheadLog(
-            os.path.join(data_dir, f"wal-{gen}.log"), fsync=fsync)
-        for rec in eng.wal.open():       # replay; Z built once, after
-            eng._replay(rec)
-        eng.version = store.version
-        eng._embed_epoch()               # one fresh build == gee_streaming
+        t0 = time.perf_counter()
+        with obs.span("serving.recovery", data_dir=data_dir) as sp:
+            with open(os.path.join(data_dir, _MANIFEST)) as f:
+                gen = int(json.load(f)["generation"])
+            prefix = os.path.join(data_dir, f"snap-{gen}")
+            store = GraphStore.load(prefix)
+            with open(prefix + ".engine.json") as f:
+                emeta = json.load(f)
+            eng = cls(store,
+                      num_shards=(num_shards if num_shards is not None
+                                  else int(emeta["num_shards"])),
+                      rebuild_churn=(rebuild_churn
+                                     if rebuild_churn is not None
+                                     else float(emeta["rebuild_churn"])),
+                      chunk_size=chunk_size, backend=backend,
+                      plan_cache=plan_cache, fsync=fsync,
+                      degraded_append_s=degraded_append_s, _boot=False)
+            eng.data_dir = data_dir
+            eng.generation = gen
+            eng.epoch = int(emeta["epoch"])
+            eng.rebuilds = int(emeta["rebuilds"])
+            eng.deltas_applied = int(emeta["deltas_applied"])
+            eng.checkpoints = int(emeta.get("checkpoints", 0))
+            eng.Y_epoch = store.Y.copy()  # a snapshot always post-rebuild
+            eng._reset_shard_fps()
+            eng.wal = WriteAheadLog(
+                os.path.join(data_dir, f"wal-{gen}.log"), fsync=fsync)
+            replayed = 0
+            for rec in eng.wal.open():   # replay; Z built once, after
+                eng._replay(rec)
+                replayed += 1
+            eng.version = store.version
+            eng._embed_epoch()           # one fresh build == gee_streaming
+            sp.set(generation=gen, wal_records=replayed)
+            sp.fence(eng.Z)
+        if obs.enabled():
+            obs.observe("repro_serving_recovery_seconds",
+                        time.perf_counter() - t0)
+            obs.counter("repro_serving_recovery_replayed_total",
+                        replayed)
+        eng._health.to(SERVING)          # recovery complete
         return eng
 
     def _replay(self, rec: W.WalRecord) -> None:
@@ -229,24 +259,29 @@ class ServingEngine:
     def _embed_epoch(self) -> None:
         """Build every shard's Z from the live multiset under the
         current epoch labels (`Y_epoch`)."""
-        if self.partition.p == 1:
-            # the store source keeps array identity + the store's
-            # chained fingerprint — quiet-store rebuilds stay tier-1
-            # plan hits, cold starts tier-2, exactly like the old
-            # single-host service
-            self.shards[0].build(self.source, self.Y_epoch)
-        else:
-            routed, self._routed_for_build = self._routed_for_build, None
-            if routed is None:
-                routed = {i: sub for i, sub
-                          in self.partition.route_graph(self.store.edges())}
-            for i, shard in enumerate(self.shards):
-                sub = routed.get(i)
-                if sub is None:
-                    sub = Graph(np.zeros(0, np.int32), np.zeros(0, np.int32),
-                                np.zeros(0, np.float32), self.n)
-                sub._fp = self._shard_fps[i]   # chained: never rehashed
-                shard.build(sub, self.Y_epoch)
+        with obs.span("serving.rebuild",
+                      metric="repro_serving_rebuild_seconds",
+                      epoch=self.epoch, shards=self.partition.p) as sp:
+            if self.partition.p == 1:
+                # the store source keeps array identity + the store's
+                # chained fingerprint — quiet-store rebuilds stay tier-1
+                # plan hits, cold starts tier-2, exactly like the old
+                # single-host service
+                self.shards[0].build(self.source, self.Y_epoch)
+            else:
+                routed, self._routed_for_build = self._routed_for_build, None
+                if routed is None:
+                    routed = {i: sub for i, sub in
+                              self.partition.route_graph(self.store.edges())}
+                for i, shard in enumerate(self.shards):
+                    sub = routed.get(i)
+                    if sub is None:
+                        sub = Graph(np.zeros(0, np.int32),
+                                    np.zeros(0, np.int32),
+                                    np.zeros(0, np.float32), self.n)
+                    sub._fp = self._shard_fps[i]   # chained: never rehashed
+                    shard.build(sub, self.Y_epoch)
+            sp.fence(self.Z)
         self._invalidate_query_cache()
 
     def _rebuild(self) -> None:
@@ -298,13 +333,17 @@ class ServingEngine:
         if self.data_dir is None:
             raise RuntimeError("checkpoint() needs a durable engine "
                                "(construct with data_dir=...)")
-        with self._mu:
+        with self._mu, obs.span(
+                "serving.checkpoint",
+                metric="repro_serving_checkpoint_seconds") as sp:
             info = self.store.compact()
             self._reset_shard_fps()
             self._rebuild()
             self.checkpoints += 1      # before the meta write, so a
             self._write_generation(self.generation + 1)   # recovered
             info["generation"] = self.generation   # engine restores it
+            sp.set(generation=self.generation)
+            obs.counter("repro_serving_checkpoints_total")
             return info
 
     def close(self) -> None:
@@ -322,6 +361,7 @@ class ServingEngine:
         u = np.asarray(u, np.int32)
         v = np.asarray(v, np.int32)
         w = np.asarray(w, np.float32)
+        t0 = obs.tick()
         with self._mu:
             Graph(u, v, w, self.n).validate()    # reject BEFORE the WAL
             wsigned = -w if delete else w
@@ -329,6 +369,7 @@ class ServingEngine:
                 self.wal.append_edges(self.store.version + 1, u, v, wsigned)
             version = self.store.apply_edges(u, v, w, delete=delete)
             self._routed_for_build = None
+            fanout = 0
             if u.shape[0]:
                 for i, (su, sv, sw) in self.partition.route_edges(
                         u, v, wsigned):
@@ -336,9 +377,16 @@ class ServingEngine:
                         self._shard_fps[i] = extend_fingerprint(
                             self._shard_fps[i], su, sv, sw)
                     self.shards[i].apply_delta(Graph(su, sv, sw, self.n))
+                    fanout += 1
                 self._invalidate_query_cache()
             self.version = version
             self.deltas_applied += 1
+            if obs.enabled():
+                obs.observe("repro_serving_delta_apply_seconds",
+                            obs.tock(t0))
+                obs.observe("repro_serving_delta_fanout_shards", fanout)
+                obs.counter("repro_serving_delta_edges_total",
+                            int(u.shape[0]))
             return version
 
     def apply_label_delta(self, nodes, labels) -> int:
@@ -346,6 +394,7 @@ class ServingEngine:
         threshold, otherwise keep serving the current epoch's Z."""
         nodes = np.asarray(nodes, np.int64)
         labels = np.asarray(labels, np.int32)
+        t0 = obs.tick()
         with self._mu:
             assert nodes.shape == labels.shape   # reject BEFORE the WAL
             if nodes.size:
@@ -358,6 +407,11 @@ class ServingEngine:
             self.version = version
             if self.churn > self.rebuild_churn:
                 self._rebuild()
+            if obs.enabled():
+                obs.observe("repro_serving_label_apply_seconds",
+                            obs.tock(t0))
+                obs.counter("repro_serving_label_updates_total",
+                            int(nodes.size))
             return version
 
     def compact(self) -> dict:
@@ -436,19 +490,27 @@ class ServingEngine:
         gathers scatter per owner and reassemble on device."""
         if self.partition.p == 1:
             return self.shards[0].rows(nodes)
+        t0 = obs.tick()
         out = jnp.zeros((nodes.shape[0], self.store.K), jnp.float32)
         for shard, idx in self.partition.route_nodes(nodes):
             out = out.at[jnp.asarray(idx)].set(
                 self.shards[shard].rows(nodes[idx]))
+        if obs.enabled():
+            jax.block_until_ready(out)
+            obs.observe("repro_serving_query_gather_seconds",
+                        obs.tock(t0), shards=self.partition.p)
         return out
 
     def query_embed(self, nodes) -> np.ndarray:
         """Z rows for a node batch: scatter to owning shards, gather
         back in request order."""
         nodes = np.atleast_1d(np.asarray(nodes, np.int32))
+        t0 = obs.tick()
         with self._mu:
             self._check_nodes(nodes)
-            return np.asarray(self._gather_rows(nodes))
+            out = np.asarray(self._gather_rows(nodes))
+        self._record_query("embed", t0, nodes.shape[0])
+        return out
 
     def centroids(self):
         """Global class centroids: per-shard partial (sums, counts)
@@ -478,11 +540,14 @@ class ServingEngine:
         resident), score against the merged centroids.  Returns
         (pred, score)."""
         nodes = np.atleast_1d(np.asarray(nodes, np.int32))
+        t0 = obs.tick()
         with self._mu:
             self._check_nodes(nodes)
             pred, score = Q.predict_rows(self._gather_rows(nodes),
                                          self.centroids())
-            return np.asarray(pred), np.asarray(score)
+            out = np.asarray(pred), np.asarray(score)
+        self._record_query("predict", t0, nodes.shape[0])
+        return out
 
     def query_topk(self, nodes, *, k: int = 10,
                    block_rows: int = 1 << 14):
@@ -491,6 +556,7 @@ class ServingEngine:
         candidates), merge per-shard lists with a blocked top-k.
         Returns (indices (q, k), scores (q, k))."""
         nodes = np.atleast_1d(np.asarray(nodes, np.int32))
+        t0 = obs.tick()
         with self._mu:
             self._check_nodes(nodes)
             if self.partition.p == 1:
@@ -499,13 +565,31 @@ class ServingEngine:
                 q = self.shards[0].normalized()[jnp.asarray(nodes)]
             else:
                 q = Q.normalize_rows(self._gather_rows(nodes))
+            ts = obs.tick()
             parts = [s.topk_candidates(q, nodes, k=k,
                                        block_rows=block_rows)
                      for s in self.shards]
+            if obs.enabled():
+                jax.block_until_ready(parts)
+                obs.observe("repro_serving_query_scatter_seconds",
+                            obs.tock(ts), shards=self.partition.p)
             if len(parts) == 1:
-                return parts[0]
-            return Q.merge_topk([p[0] for p in parts],
-                                [p[1] for p in parts], k=k)
+                out = parts[0]
+            else:
+                out = Q.merge_topk([p[0] for p in parts],
+                                   [p[1] for p in parts], k=k)
+        self._record_query("topk", t0, nodes.shape[0])
+        return out
+
+    def _record_query(self, kind: str, t0: float, batch: int) -> None:
+        """One histogram + counter pair per read, labeled by kind —
+        the scatter/gather sub-steps have their own series."""
+        if not obs.enabled():
+            return
+        obs.observe("repro_serving_query_seconds", obs.tock(t0),
+                    kind=kind)
+        obs.counter("repro_serving_queries_total", kind=kind)
+        obs.counter("repro_serving_query_nodes_total", batch, kind=kind)
 
     # -- async flush / compaction loop -------------------------------------
 
@@ -544,6 +628,10 @@ class ServingEngine:
             except Exception as e:       # engine bug: record, keep going
                 self.loop_error = e
                 served = 0
+            if obs.enabled():
+                obs.counter("repro_serving_flush_iterations_total")
+                if served:
+                    obs.counter("repro_serving_flush_served_total", served)
             if (self.wal is not None
                     and self._checkpoint_bytes is not None
                     and self.wal.bytes_written > self._checkpoint_bytes):
@@ -566,7 +654,36 @@ class ServingEngine:
 
     # -- observability -----------------------------------------------------
 
+    def health(self) -> dict:
+        """Deployment health, re-evaluated on every call (not latched):
+        ``starting`` until the boot/recovery rebuild lands, then
+        ``serving``, and ``degraded`` while the flush loop has recorded
+        an engine-level error or the last WAL append (write + flush
+        [+fsync]) exceeded `degraded_append_s`.  A degraded deployment
+        still serves — the state is a signal, not a circuit breaker."""
+        with self._mu:
+            reasons = []
+            if self.loop_error is not None:
+                reasons.append(f"loop_error: {self.loop_error!r}")
+            if (self.wal is not None
+                    and self.wal.last_append_seconds
+                    > self.degraded_append_s):
+                reasons.append(
+                    "wal append "
+                    f"{self.wal.last_append_seconds * 1e3:.1f}ms > "
+                    f"{self.degraded_append_s * 1e3:.1f}ms")
+            if reasons:
+                self._health.to(DEGRADED, reason="; ".join(reasons))
+            elif self._health.state != STARTING:
+                self._health.to(SERVING)
+            return self._health.as_dict()
+
     def stats(self) -> dict:
+        """Introspection snapshot, read atomically under the engine
+        lock so the `(version, epoch, fingerprint, durability)` group
+        is never torn against a concurrent writer.  The legacy scalar
+        keys are kept verbatim; `health` is the health() state and
+        `metrics` is the process registry's `repro_serving_*` slice."""
         with self._mu:
             plan = {"built": 0, "hits": 0, "disk_hits": 0,
                     "disk_stores": 0}
@@ -585,7 +702,8 @@ class ServingEngine:
                    # the owned-rows memory contract, observable: peak
                    # per-shard accumulator bytes scales ~ n/p
                    "shard_accumulator_bytes": acc,
-                   "peak_shard_accumulator_bytes": max(acc, default=0)}
+                   "peak_shard_accumulator_bytes": max(acc, default=0),
+                   "health": self.health()}
             if self.loop_error is not None:
                 out["loop_error"] = repr(self.loop_error)
             if self.data_dir is not None:
@@ -594,6 +712,8 @@ class ServingEngine:
                     "checkpoints": self.checkpoints,
                     "wal_records": self.wal.records_appended,
                     "wal_bytes": self.wal.bytes_written}
+            if obs.enabled():
+                out["metrics"] = obs.snapshot(prefix="repro_serving")
             return out
 
     def __enter__(self) -> "ServingEngine":

@@ -29,6 +29,7 @@ import argparse
 
 import numpy as np
 
+from repro import obs
 from repro.core.gee import gee
 from repro.graph.edges import make_labels
 from repro.graph.generators import sbm
@@ -69,6 +70,9 @@ def main(argv=None):
     ap.add_argument("--rebuild-churn", type=float, default=0.05)
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--obs-dump", action="store_true",
+                    help="print the metrics registry (Prometheus text "
+                         "format) and health state at the end")
     args = ap.parse_args(argv)
 
     rng = np.random.default_rng(args.seed)
@@ -131,6 +135,9 @@ def main(argv=None):
     err = _self_check(engine)
     print(f"[serve-gee] self-check max|Z_delta - Z_rebuild| = {err:.2e}")
     assert err < 1e-3, "delta-maintained Z diverged from rebuild"
+    if args.obs_dump:
+        print(f"[serve-gee] health: {engine.health()}")
+        print(obs.render_prometheus(), end="")
 
     if args.data_dir:
         engine.close()

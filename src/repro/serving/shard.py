@@ -34,6 +34,7 @@ from typing import Optional, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.encoder import Embedder, EncoderConfig
 from repro.graph.edges import Graph
 from repro.serving import queries as Q
@@ -70,6 +71,11 @@ class EmbeddingShard:
         on other shards."""
         self.embedder.fit(graph_or_source, Y)
         self._Zn = None
+        if obs.enabled():
+            # the owned-rows memory contract as a live series: per-shard
+            # accumulator bytes shrink ~ n/p as shards are added
+            obs.gauge("repro_serving_shard_accumulator_bytes",
+                      self.accumulator_nbytes, shard=str(self.shard_id))
 
     def apply_delta(self, sub: Graph) -> None:
         """Fold a routed edge sub-batch into Z (weights sign-folded

@@ -34,11 +34,14 @@ from __future__ import annotations
 
 import os
 import struct
+import time
 import zlib
 from dataclasses import dataclass
 from typing import Iterator, Optional
 
 import numpy as np
+
+from repro import obs
 
 _FILE_MAGIC = b"REPROWAL1\n"
 _HEADER = struct.Struct("<II")          # payload_len, crc32
@@ -136,10 +139,18 @@ class WriteAheadLog:
     valid records so the engine can replay them; subsequent ``append_*``
     calls extend the same file.  A missing file is created empty."""
 
+    _KIND_NAMES = {EDGES: "edges", LABELS: "labels",
+                   COMPACT: "compact", REBUILD: "rebuild"}
+
     def __init__(self, path: str, *, fsync: bool = False):
         self.path = str(path)
         self.fsync = bool(fsync)
         self.records_appended = 0
+        #: wall seconds of the most recent append (write+flush[+fsync])
+        #: — always tracked (cheap next to the flush syscall) because
+        #: the engine's health() degrades on it even with obs off
+        self.last_append_seconds = 0.0
+        self.last_fsync_seconds = 0.0
         self._f: Optional[object] = None
 
     # -- lifecycle ---------------------------------------------------------
@@ -178,13 +189,28 @@ class WriteAheadLog:
     def _append(self, rec: WalRecord) -> None:
         if self._f is None:
             raise RuntimeError("WAL not open")
+        t0 = time.perf_counter()
         payload = _encode(rec)
         self._f.write(_HEADER.pack(len(payload), zlib.crc32(payload)))
         self._f.write(payload)
         self._f.flush()                 # survives process death
         if self.fsync:                  # survives power loss
+            tf = time.perf_counter()
             os.fsync(self._f.fileno())
+            self.last_fsync_seconds = time.perf_counter() - tf
+        self.last_append_seconds = time.perf_counter() - t0
         self.records_appended += 1
+        if obs.enabled():
+            obs.observe("repro_serving_wal_append_seconds",
+                        self.last_append_seconds)
+            if self.fsync:
+                obs.observe("repro_serving_wal_fsync_seconds",
+                            self.last_fsync_seconds)
+            obs.counter("repro_serving_wal_append_bytes_total",
+                        _HEADER.size + len(payload))
+            obs.counter("repro_serving_wal_records_total",
+                        kind=self._KIND_NAMES.get(rec.kind,
+                                                  str(rec.kind)))
 
     def append_edges(self, version: int, u, v, w) -> None:
         """w must already be sign-folded (deletions negative)."""

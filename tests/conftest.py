@@ -19,6 +19,10 @@ def pytest_configure(config):
     # persistent tier opt back in with explicit plan_cache dirs (or set
     # the env var themselves in subprocesses).
     os.environ["REPRO_PLAN_CACHE"] = "off"
+    # Same hermeticity for observability: never append test spans to a
+    # user's JSONL trace sink (tests that exercise the sink point it at
+    # tmp_path via obs.configure).
+    os.environ.pop("REPRO_OBS_TRACE", None)
 
 
 @pytest.fixture
