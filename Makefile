@@ -57,8 +57,12 @@ bench-encoder:
 # (fig3 spawns a device-sweep subprocess matrix and roofline needs
 # dry-run artifacts; both have their own entry points.)
 bench-smoke:
-	$(PY) -m benchmarks.run --quick --only table1,fig4,kernels,encoder,serving
+	$(PY) -m benchmarks.run --quick --only table1,fig4,kernels,encoder,serving,index
 	$(PY) -m benchmarks.obs_gate --quick
+
+# IVF index: QPS + recall@10 vs the exact scan at n in {1e5, 1e6}.
+bench-index:
+	$(PY) -m benchmarks.run --only index
 
 # The obs overhead gate alone, at full size.
 obs-gate:

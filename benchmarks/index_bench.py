@@ -1,0 +1,99 @@
+"""IVF index benchmark: QPS and recall@10 vs the exact full scan.
+
+The index's pitch (ROADMAP item 4) is sub-linear top-k: assign rows to
+their nearest class centroid, probe only the ``nprobe`` most promising
+cells per query.  This driver measures, at n in {1e5, 1e6} on an SBM
+graph whose communities match the label classes (the regime GEE's
+centroid quantizer is built for):
+
+    index_build_{tag}          full quantization of all owned rows
+    index_topk256_exact_{tag}  256-query exact scan (the baseline)
+    index_topk256_ivf_{tag}    same batch through the index at the
+                               default nprobe
+    index_recall10_{tag}       fraction of the exact top-10 the index
+                               returns (value column = fraction, not a
+                               latency — the derived column repeats it)
+
+The acceptance bar: at n=1e6 the ivf row must beat the exact row on
+queries/s while recall@10 stays >= 0.9 (a WARN line flags any miss —
+`make bench-smoke` runs the quick variant so a broken index fails CI
+via the `expected_keys` schema check).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import emit, time_it
+from repro.graph.edges import make_labels
+from repro.graph.generators import sbm
+from repro.serving.engine import ServingEngine
+from repro.serving.store import GraphStore
+
+K = 10
+DEG = 10                 # expected edges per node
+QBATCH = 256
+LABEL_FRAC = 0.5
+
+
+def _sizes() -> list:
+    return [2_000] if common.QUICK else [100_000, 1_000_000]
+
+
+def expected_keys() -> list:
+    """Schema for `benchmarks.run`'s silently-empty-driver check."""
+    keys = []
+    for n in _sizes():
+        tag = f"n{n}"
+        keys += [f"index_build_{tag}",
+                 f"index_topk{QBATCH}_exact_{tag}",
+                 f"index_topk{QBATCH}_ivf_{tag}",
+                 f"index_recall10_{tag}"]
+    return keys
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for n in _sizes():
+        tag = f"n{n}"
+        g, truth = sbm(n, K, DEG * n, p_in=0.9, seed=0)
+        Y = make_labels(n, K, LABEL_FRAC, rng, true_labels=truth)
+        eng = ServingEngine(GraphStore(g, Y, K))
+
+        t0 = time.perf_counter()
+        eng.enable_index()
+        emit(f"index_build_{tag}", time.perf_counter() - t0,
+             f"K={K} cells")
+
+        nodes = rng.integers(0, n, QBATCH).astype(np.int32)
+        t_exact = time_it(
+            lambda: eng.query_topk(nodes, k=10, mode="exact"))
+        emit(f"index_topk{QBATCH}_exact_{tag}", t_exact,
+             f"{QBATCH / t_exact:,.0f} q/s")
+        t_ivf = time_it(
+            lambda: eng.query_topk(nodes, k=10, mode="ivf"))
+        nprobe = eng.stats()["index"]["nprobe"]
+        speedup = t_exact / t_ivf
+        emit(f"index_topk{QBATCH}_ivf_{tag}", t_ivf,
+             f"{QBATCH / t_ivf:,.0f} q/s nprobe={nprobe} "
+             f"speedup={speedup:.1f}x")
+
+        ei, _ = eng.query_topk(nodes, k=10, mode="exact")
+        ii, _ = eng.query_topk(nodes, k=10, mode="ivf")
+        recall = float(np.mean([
+            len(set(a.tolist()) & set(b.tolist())) / 10
+            for a, b in zip(ei, ii)]))
+        emit(f"index_recall10_{tag}", recall,
+             f"recall@10={recall:.3f} (fraction) nprobe={nprobe}")
+        if recall < 0.9:
+            print(f"# WARN index recall@10 {recall:.3f} < 0.9 "
+                  f"target at {tag}")
+        if not common.QUICK and speedup <= 1.0:
+            print(f"# WARN index ivf not faster than exact at {tag} "
+                  f"({speedup:.2f}x)")
+
+
+if __name__ == "__main__":
+    run()

@@ -12,6 +12,7 @@ Suites:
                + plan-cache (host packing removed on refit)
     serving  — online-service update latency vs full re-embed + queries
                + sharded-engine rows incl. per-shard accumulator memory
+    index    — IVF index QPS + recall@10 vs the exact full scan
     roofline — per-cell roofline terms from dry-run artifacts
 
 Schema check: after each suite runs, the rows it emitted are checked
@@ -33,6 +34,7 @@ SUITES = {
     "kernels": "benchmarks.kernels_bench",
     "encoder": "benchmarks.encoder_bench",
     "serving": "benchmarks.serving_bench",
+    "index": "benchmarks.index_bench",
     "fig3": "benchmarks.fig3_scaling",
     "roofline": "benchmarks.roofline_report",
 }

@@ -1,0 +1,23 @@
+"""repro.index — sub-linear approximate-nearest-neighbor serving over Z.
+
+The serving engine's exact top-k scans every owned row per query; at
+millions of nodes that full blocked cosine scan is the QPS ceiling.
+GEE hands us a coarse quantizer for free: by construction rows
+concentrate around their class centroids (One-Hot Graph Encoder
+Embedding), so an IVF-style index — assign every row to its nearest
+class centroid, keep per-cell inverted lists, score a query only
+against the ``nprobe`` most promising cells with the same exact
+blocked top-k kernel — answers in sub-linear time while staying
+*exact-testable*: probing all ``K`` cells partitions the rows, so the
+answer is bit-identical to the full scan (the query kernels order
+candidates lexicographically by ``(-score, ascending global id)``).
+
+`IVFIndex` (`ivf.py`) is the per-shard half: inverted lists over one
+shard's owned rows, **delta-maintained** — an edge delta touches only
+incident rows, so membership updates are O(batch rows); the engine
+owns the shared quantizer centroids and the churn-gated
+re-quantization policy (`ServingEngine.query_topk(mode="ivf")`).
+"""
+from repro.index.ivf import DEFAULT_NPROBE, IVFIndex
+
+__all__ = ["DEFAULT_NPROBE", "IVFIndex"]

@@ -1,0 +1,220 @@
+"""IVFIndex: per-shard inverted-file index over owned embedding rows.
+
+One `IVFIndex` covers one shard's owned slice ``Zn`` (row-normalized,
+``(owned, K)``) living at global rows ``[row_offset, row_offset +
+owned)``.  The coarse quantizer is the matrix of class centroids the
+engine already computes (`queries.class_sums`): every owned row is
+assigned to its nearest centroid in cosine space (ties to the lowest
+cell id — `argmax` is deterministic), and each cell keeps its member
+rows as a **sorted** array of local row ids.
+
+Why sorted matters: the query kernels (`queries.topk_cosine_ids`)
+break score ties by ascending global id, which makes the per-cell
+top-k lists — and therefore the lexicographic `queries.merge_topk` of
+any set of cells — bit-identical to the full scan whenever the probed
+cells cover all rows.  ``nprobe=K`` *is* the exact scan, just routed
+through the index.
+
+Delta maintenance: the index never stores Z values, only memberships,
+so an edge delta that changes a batch of incident rows is absorbed by
+re-assigning exactly those rows against the *fixed* build-time
+centroids (`update_rows`, O(batch) assignments + per-affected-cell
+membership splices).  Untouched rows keep their assignment, which is
+still what a fresh `build` under the same centroids would compute —
+the delta-maintained index and a rebuilt one answer identically
+(property-tested).  Centroid drift is the engine's business: it
+tracks cumulative moved rows and re-quantizes (fresh centroids, full
+re-assign) past a churn threshold, the same policy shape as its
+rebuild-vs-delta gate.
+
+Per-cell candidate matrices are cached on device keyed by the identity
+of the ``Zn`` array (the shard's normalized-slice cache): any write
+replaces that array, which drops this cache wholesale — repeated
+queries between writes skip the gather entirely.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.graph.edges import bucket_size
+from repro.serving import queries as Q
+
+#: default number of probed cells for ``mode="ivf"`` queries — 2 keeps
+#: recall@10 >= 0.9 on community-structured graphs while scanning
+#: ~2/K of the rows (`benchmarks/index_bench.py` charts the trade-off).
+DEFAULT_NPROBE = 2
+
+
+class IVFIndex:
+    """Inverted label-cell lists over one shard's owned rows."""
+
+    def __init__(self, *, K: int, row_offset: int = 0):
+        self.K = int(K)
+        self.row_offset = int(row_offset)
+        #: quantizer centroids (K, K) float32 — fixed between builds
+        self.centroids: Optional[np.ndarray] = None
+        self._cn = None                    # row-normalized centroids
+        self.assign: Optional[np.ndarray] = None   # (owned,) cell ids
+        self._members: list = [np.zeros(0, np.int64)
+                               for _ in range(self.K)]
+        self.owned = 0
+        #: rows re-assigned to a different cell since the last build —
+        #: the engine's re-quantization churn signal
+        self.moved_rows = 0
+        self.builds = 0
+        self.updates = 0
+        self._zn_ref = None                # identity key of the cache
+        self._cells_cache: dict = {}
+
+    # -- quantization ------------------------------------------------------
+
+    def _assign_cells(self, Zn, rows: Optional[np.ndarray] = None
+                      ) -> np.ndarray:
+        """Nearest-centroid cell per row (cosine; ties -> lowest cell)."""
+        sub = Zn if rows is None else Zn[jnp.asarray(rows)]
+        # .copy(): jax buffers come back read-only; `assign` is mutated
+        # in place by update_rows
+        return np.asarray(jnp.argmax(sub @ self._cn.T, axis=1),
+                          np.int32).copy()
+
+    def build(self, Zn, centroids) -> None:
+        """Full (re)quantization of every owned row under `centroids`.
+
+        A class with no labeled nodes yields an all-zero centroid;
+        `normalize_rows` maps it to the zero vector (never NaN), so it
+        simply attracts no rows and its cell stays empty."""
+        t0 = obs.tick()
+        self.centroids = np.asarray(centroids, np.float32)
+        assert self.centroids.shape == (self.K, self.K)
+        self._cn = Q.normalize_rows(jnp.asarray(self.centroids))
+        self.owned = int(Zn.shape[0]) if Zn is not None else 0
+        if self.owned:
+            self.assign = self._assign_cells(Zn)
+        else:
+            self.assign = np.zeros(0, np.int32)
+        self._members = [
+            np.nonzero(self.assign == c)[0].astype(np.int64)
+            for c in range(self.K)]        # np.nonzero -> sorted ids
+        self.moved_rows = 0
+        self.builds += 1
+        self._drop_cache()
+        if obs.enabled():
+            obs.observe("repro_index_build_seconds", obs.tock(t0))
+            obs.counter("repro_index_builds_total")
+
+    def update_rows(self, Zn, local_rows) -> int:
+        """Delta maintenance: re-assign exactly `local_rows` (the rows
+        an edge batch touched) against the FIXED build-time centroids;
+        returns how many changed cell.  O(batch) assignments plus a
+        sorted splice per affected cell — never a full re-quantization
+        (that is the engine's churn-gated `build`)."""
+        if self.assign is None:
+            raise RuntimeError("IVFIndex.update_rows before build()")
+        t0 = obs.tick()
+        rows = np.unique(np.asarray(local_rows, np.int64))
+        if rows.size and (rows[0] < 0 or rows[-1] >= self.owned):
+            raise IndexError(
+                f"local rows outside [0, {self.owned})")
+        moved = 0
+        if rows.size:
+            new = self._assign_cells(Zn, rows)
+            old = self.assign[rows]
+            changed = new != old
+            moved = int(changed.sum())
+            if moved:
+                mrows, mold, mnew = rows[changed], old[changed], \
+                    new[changed]
+                for c in np.unique(mold):
+                    self._members[c] = np.setdiff1d(
+                        self._members[c], mrows[mold == c],
+                        assume_unique=True)
+                for c in np.unique(mnew):
+                    self._members[c] = np.union1d(
+                        self._members[c], mrows[mnew == c])
+                self.assign[rows] = new
+                self.moved_rows += moved
+        self.updates += 1
+        self._drop_cache()                 # Zn changed under the delta
+        if obs.enabled():
+            obs.observe("repro_index_update_seconds", obs.tock(t0))
+            obs.counter("repro_index_updates_total")
+            if moved:
+                obs.counter("repro_index_moved_rows_total", moved)
+        return moved
+
+    @property
+    def churn(self) -> float:
+        """Fraction of owned rows that changed cell since the last
+        build — the engine re-quantizes past its threshold."""
+        return self.moved_rows / max(self.owned, 1)
+
+    def cell_sizes(self) -> np.ndarray:
+        """Rows per cell (K,) — the occupancy the server's --obs-dump
+        reports; sums to `owned`."""
+        return np.array([m.shape[0] for m in self._members], np.int64)
+
+    # -- query -------------------------------------------------------------
+
+    def _drop_cache(self) -> None:
+        self._zn_ref = None
+        self._cells_cache.clear()
+
+    def _cell_matrix(self, Zn, c: int):
+        """(rows, global ids) for cell `c`, gathered once per Zn
+        version (any write replaces the shard's normalized slice, which
+        invalidates this cache by identity)."""
+        if self._zn_ref is not Zn:
+            self._zn_ref = Zn
+            self._cells_cache.clear()
+        hit = self._cells_cache.get(c)
+        if hit is None:
+            rows = self._members[c]
+            hit = (Zn[jnp.asarray(rows)],
+                   (rows + self.row_offset).astype(np.int32))
+            self._cells_cache[c] = hit
+        return hit
+
+    def topk(self, Zn, q, qnodes, probe, *, k: int,
+             block_rows: int = 1 << 14):
+        """Exact blocked top-k of unit-norm queries `q` against the
+        union of this shard's rows in the probed cells.
+
+        `probe` is the engine's (nq, nprobe) cell choice (shared across
+        shards so every shard scores the same cells).  Returns
+        ``(idx (nq, k) int32, val (nq, k) float32, rows_scanned)`` with
+        global-id-stamped candidates in ``(-score, id)`` order, -1/-inf
+        padded when fewer than k rows were probed — ready for
+        `queries.merge_topk` across shards."""
+        qnodes = np.asarray(qnodes, np.int32)
+        probe = np.asarray(probe)
+        nq = int(q.shape[0])
+        vals = np.full((nq, k), -np.inf, np.float32)
+        idxs = np.full((nq, k), -1, np.int32)
+        scanned = 0
+        for c in np.unique(probe):
+            if c < 0 or not self._members[c].size:
+                continue                   # empty cell: nothing to score
+            qsel = np.nonzero((probe == c).any(axis=1))[0]
+            if not qsel.size:
+                continue
+            Zc, ids = self._cell_matrix(Zn, int(c))
+            # pad the query batch to a power-of-two bucket so the
+            # jitted block kernel compiles per bucket, not per subset
+            qb = bucket_size(qsel.size, floor=32)
+            qpad = np.zeros(qb, np.int64)
+            qpad[:qsel.size] = qsel
+            qn = np.full(qb, -1, np.int32)
+            qn[:qsel.size] = qnodes[qsel]
+            pi, pv = Q.topk_cosine_ids(
+                Zc, ids, q[jnp.asarray(qpad)], qn, k=k,
+                block_rows=block_rows)
+            pi, pv = pi[:qsel.size], pv[:qsel.size]
+            scanned += int(self._members[c].size) * int(qsel.size)
+            mi, mv = Q.merge_topk([idxs[qsel], pi], [vals[qsel], pv],
+                                  k=k)
+            idxs[qsel], vals[qsel] = mi, mv
+        return idxs, vals, scanned

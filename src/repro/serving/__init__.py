@@ -13,7 +13,13 @@ system built as a **deployment**, not a single object:
 * `GraphStore` (`store.py`) — the versioned in-memory edge multiset +
   delta log the engine serializes.
 * `MicroBatcher` (`batcher.py`) — read coalescing and write barriers
-  over any serving target.
+  over any serving target (`topk_mode="ivf"` routes coalesced top-k
+  batches through the index).
+* the IVF-GEE index (`repro.index`, a sibling package) — optional
+  sub-linear top-k: per-shard label-cell inverted lists over the class
+  centroids, delta-maintained on every edge batch, churn-gated
+  re-quantization, quantizer persisted via WAL `INDEX` records
+  (`ServingEngine(..., index="ivf")` / `query_topk(mode="ivf")`).
 * `EmbeddingService` (`service.py`) — DEPRECATED: the 1-shard volatile
   special case of `ServingEngine`, kept as a compat shim.
 

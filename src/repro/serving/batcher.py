@@ -84,10 +84,17 @@ class MicroBatcher:
     """Coalesces reads, serializes writes, keeps per-kind stats."""
 
     def __init__(self, target, *, topk: int = 10,
-                 topk_block_rows: int = 1 << 14):
+                 topk_block_rows: int = 1 << 14,
+                 topk_mode: str = "exact",
+                 topk_nprobe: Optional[int] = None):
         self.target = target
         self.topk = int(topk)
         self.topk_block_rows = int(topk_block_rows)
+        #: "ivf" routes coalesced top-k batches through the target's
+        #: IVF index (`repro.index`); targets without mode support
+        #: (the 1-shard EmbeddingService shim) only accept "exact"
+        self.topk_mode = str(topk_mode)
+        self.topk_nprobe = topk_nprobe
         self._lock = threading.Lock()
         self._queue: list[Ticket] = []
         self._stats = {k: _KindStats()
@@ -249,8 +256,12 @@ class MicroBatcher:
             pred, score = self.target.query_predict(cat)
             return list(zip(self._split(np.asarray(pred), sizes),
                             self._split(np.asarray(score), sizes)))
+        kwargs = {}
+        if self.topk_mode != "exact":     # only pass when asked: keeps
+            kwargs["mode"] = self.topk_mode   # mode-less targets working
+            kwargs["nprobe"] = self.topk_nprobe
         idx, val = self.target.query_topk(
-            cat, k=self.topk, block_rows=self.topk_block_rows)
+            cat, k=self.topk, block_rows=self.topk_block_rows, **kwargs)
         return list(zip(self._split(idx, sizes),
                         self._split(val, sizes)))
 

@@ -82,7 +82,12 @@ class ServingEngine:
                  chunk_size: int = 1 << 20, backend: str = "streaming",
                  plan_cache: Union[str, None] = "auto",
                  fsync: bool = False, degraded_append_s: float = 0.5,
+                 index: Optional[str] = None, index_churn: float = 0.25,
+                 nprobe: Optional[int] = None,
                  _boot: bool = True):
+        if index not in (None, "ivf"):
+            raise ValueError(f"unknown index mode {index!r} "
+                             "(None or 'ivf')")
         self.store = store
         self.source = StoreSource(store)
         self.rebuild_churn = float(rebuild_churn)
@@ -114,6 +119,17 @@ class ServingEngine:
         self._shard_fps: list = []
         self._routed_for_build = None
         self._centroids = None
+        #: IVF index state (repro.index): the engine owns the shared
+        #: quantizer centroids (fixed between builds — that is what
+        #: makes delta maintenance == rebuild) and the churn-gated
+        #: re-quantization policy, mirroring `rebuild_churn`
+        self.index_mode: Optional[str] = None
+        self.index_churn = float(index_churn)
+        self.nprobe = int(nprobe) if nprobe is not None else None
+        self._index_centroids: Optional[np.ndarray] = None
+        self._index_cn = None            # row-normalized quantizer
+        self._index_moved = 0            # rows that changed cell
+        self.requantizes = 0
         self._mu = threading.RLock()
         self._loop_thread: Optional[threading.Thread] = None
         self._loop_stop: Optional[threading.Event] = None
@@ -124,6 +140,8 @@ class ServingEngine:
         if data_dir is None:
             self._reset_shard_fps()
             self._rebuild()
+            if index is not None:
+                self.enable_index()
         else:
             self.data_dir = str(data_dir)
             os.makedirs(self.data_dir, exist_ok=True)
@@ -135,6 +153,8 @@ class ServingEngine:
             self.store.compact()
             self._reset_shard_fps()
             self._rebuild()
+            if index is not None:
+                self.enable_index()      # gen 0 snapshot carries it
             self._write_generation(0)
         self._health.to(SERVING)        # boot complete: starting -> serving
 
@@ -182,6 +202,16 @@ class ServingEngine:
             eng.checkpoints = int(emeta.get("checkpoints", 0))
             eng.Y_epoch = store.Y.copy()  # a snapshot always post-rebuild
             eng._reset_shard_fps()
+            imeta = emeta.get("index")
+            if imeta is not None:        # snapshot carried an index
+                eng.index_mode = imeta["mode"]
+                eng.index_churn = float(imeta["churn"])
+                eng.nprobe = (int(imeta["nprobe"])
+                              if imeta["nprobe"] is not None else None)
+                eng.requantizes = int(imeta.get("requantizes", 0))
+                eng._index_centroids = np.asarray(
+                    imeta["centroids"], np.float32).reshape(
+                        store.K, store.K)
             eng.wal = WriteAheadLog(
                 os.path.join(data_dir, f"wal-{gen}.log"), fsync=fsync)
             replayed = 0
@@ -190,6 +220,13 @@ class ServingEngine:
                 replayed += 1
             eng.version = store.version
             eng._embed_epoch()           # one fresh build == gee_streaming
+            if eng.index_mode is not None:
+                # memberships are a pure function of (Z, centroids):
+                # rebuilding under the replayed quantizer answers
+                # bit-identically to the crashed process (the churn
+                # counter restarts at 0 — it is a drift heuristic, not
+                # answer state)
+                eng._build_index(eng._index_centroids, record=False)
             sp.set(generation=gen, wal_records=replayed)
             sp.fence(eng.Z)
         if obs.enabled():
@@ -223,6 +260,13 @@ class ServingEngine:
             self._advance_epoch()
         elif rec.kind == W.REBUILD:
             self._advance_epoch()
+        elif rec.kind == W.INDEX:
+            # a live (re-)quantization: restore the exact quantizer;
+            # the index itself is rebuilt once after replay
+            K = self.store.K
+            self._index_centroids = np.asarray(
+                rec.a, np.float32).reshape(K, K).copy()
+            self.index_mode = "ivf"
 
     def _advance_epoch(self) -> None:
         """Epoch bookkeeping shared by live rebuilds and replay."""
@@ -285,13 +329,54 @@ class ServingEngine:
         self._invalidate_query_cache()
 
     def _rebuild(self) -> None:
-        """Full re-embed under the store's current labels; new epoch."""
+        """Full re-embed under the store's current labels; new epoch.
+        A wholesale Z rewrite invalidates every cell assignment, so an
+        enabled index re-quantizes under fresh centroids."""
         self._advance_epoch()
         self._embed_epoch()
         self.version = self.store.version
+        if self.index_mode is not None:
+            self._requantize()
 
     def _invalidate_query_cache(self) -> None:
         self._centroids = None
+
+    # -- IVF index (repro.index) -------------------------------------------
+
+    def enable_index(self) -> None:
+        """Turn on IVF serving: quantize every shard's owned rows under
+        the current global class centroids.  Idempotent."""
+        with self._mu:
+            if self.index_mode is None:
+                self.index_mode = "ivf"
+                self._build_index()
+
+    def _build_index(self, centroids=None, *, record: bool = True) -> None:
+        """(Re)quantize all shards under `centroids` (default: the
+        current epoch's class centroids).  On a durable engine the
+        quantizer is WAL-logged (record=False during recovery, where it
+        came FROM the log/snapshot)."""
+        if centroids is None:
+            centroids = self.centroids()
+        centroids = np.asarray(centroids, np.float32)
+        with obs.span("index.build", shards=self.partition.p,
+                      epoch=self.epoch):
+            for shard in self.shards:
+                shard.build_index(centroids)
+        self._index_centroids = centroids
+        self._index_cn = Q.normalize_rows(jnp.asarray(centroids))
+        self._index_moved = 0
+        if record and self.wal is not None:
+            self.wal.append_index(self.store.version, centroids)
+
+    def _requantize(self) -> None:
+        """Fresh centroids + full re-assign — the churn-gated escape
+        hatch from accumulated delta drift (and the forced path after
+        any epoch rebuild)."""
+        self._build_index()
+        self.requantizes += 1
+        if obs.enabled():
+            obs.counter("repro_index_requantizes_total")
 
     # -- durability --------------------------------------------------------
 
@@ -301,13 +386,22 @@ class ServingEngine:
         the previous generation fully intact."""
         prefix = os.path.join(self.data_dir, f"snap-{gen}")
         self.store.snapshot(prefix)
-        _atomic_write_json(prefix + ".engine.json", {
+        emeta = {
             "format": _FORMAT, "epoch": self.epoch,
             "rebuilds": self.rebuilds,
             "deltas_applied": self.deltas_applied,
             "checkpoints": self.checkpoints,
             "num_shards": self.partition.p,
-            "rebuild_churn": self.rebuild_churn})
+            "rebuild_churn": self.rebuild_churn}
+        if self.index_mode is not None:
+            # the quantizer IS the index's durable state: memberships
+            # are a pure function of (Z, centroids), both replayable
+            emeta["index"] = {
+                "mode": self.index_mode, "churn": self.index_churn,
+                "nprobe": self.nprobe,
+                "requantizes": self.requantizes,
+                "centroids": self._index_centroids.ravel().tolist()}
+        _atomic_write_json(prefix + ".engine.json", emeta)
         if self.wal is not None:
             self.wal.close()
         old = self.generation
@@ -377,8 +471,20 @@ class ServingEngine:
                         self._shard_fps[i] = extend_fingerprint(
                             self._shard_fps[i], su, sv, sw)
                     self.shards[i].apply_delta(Graph(su, sv, sw, self.n))
+                    if self.index_mode is not None:
+                        # delta-maintain: re-assign exactly the owned
+                        # rows this batch rewrote (O(batch))
+                        lo, hi = self.partition.slice(i)
+                        pts = np.concatenate([su, sv])
+                        own = np.unique(pts[(pts >= lo) & (pts < hi)])
+                        self._index_moved += \
+                            self.shards[i].update_index(own)
                     fanout += 1
                 self._invalidate_query_cache()
+                if (self.index_mode is not None
+                        and self._index_moved
+                        > self.index_churn * self.n):
+                    self._requantize()
             self.version = version
             self.deltas_applied += 1
             if obs.enabled():
@@ -550,15 +656,29 @@ class ServingEngine:
         return out
 
     def query_topk(self, nodes, *, k: int = 10,
-                   block_rows: int = 1 << 14):
+                   block_rows: int = 1 << 14, mode: str = "exact",
+                   nprobe: Optional[int] = None):
         """Top-k cosine neighbors: gather + normalize the query rows,
-        score them against every shard's owned slice (global-id-stamped
-        candidates), merge per-shard lists with a blocked top-k.
+        score them against candidate rows (global-id-stamped), merge
+        per-shard lists with a blocked top-k.
+
+        ``mode="exact"`` scans every owned row; ``mode="ivf"`` routes
+        through the per-shard IVF index (`repro.index`), scoring only
+        the `nprobe` cells nearest each query — sub-linear scan volume,
+        and **bit-identical** to exact at ``nprobe=K`` (probing every
+        cell covers every row; all top-k surfaces order candidates by
+        ``(-score, ascending id)``).  An engine constructed without
+        ``index="ivf"`` builds the index lazily on the first ivf query.
         Returns (indices (q, k), scores (q, k))."""
+        if mode not in ("exact", "ivf"):
+            raise ValueError(f"unknown topk mode {mode!r} "
+                             "('exact' or 'ivf')")
         nodes = np.atleast_1d(np.asarray(nodes, np.int32))
         t0 = obs.tick()
         with self._mu:
             self._check_nodes(nodes)
+            if mode == "ivf" and self.index_mode is None:
+                self.enable_index()
             if self.partition.p == 1:
                 # gather from the CACHED normalized slice (the old
                 # single-host path: no re-normalization per query)
@@ -566,20 +686,49 @@ class ServingEngine:
             else:
                 q = Q.normalize_rows(self._gather_rows(nodes))
             ts = obs.tick()
-            parts = [s.topk_candidates(q, nodes, k=k,
-                                       block_rows=block_rows)
-                     for s in self.shards]
+            if mode == "ivf":
+                probe = self._probe_cells(q, nprobe)
+                parts = [s.index_topk(q, nodes, probe, k=k,
+                                      block_rows=block_rows)
+                         for s in self.shards]
+                scanned = sum(p[2] for p in parts)
+            else:
+                parts = [s.topk_candidates(q, nodes, k=k,
+                                           block_rows=block_rows)
+                         for s in self.shards]
             if obs.enabled():
-                jax.block_until_ready(parts)
+                jax.block_until_ready([p[:2] for p in parts])
                 obs.observe("repro_serving_query_scatter_seconds",
                             obs.tock(ts), shards=self.partition.p)
             if len(parts) == 1:
-                out = parts[0]
+                out = parts[0][0], parts[0][1]
             else:
                 out = Q.merge_topk([p[0] for p in parts],
                                    [p[1] for p in parts], k=k)
-        self._record_query("topk", t0, nodes.shape[0])
+            if mode == "ivf" and obs.enabled():
+                obs.observe("repro_index_topk_seconds", obs.tock(ts))
+                obs.counter("repro_index_queries_total")
+                obs.counter("repro_index_rows_scanned_total", scanned)
+                obs.observe("repro_index_scan_fraction",
+                            scanned / max(nodes.shape[0] * self.n, 1))
+        self._record_query("topk" if mode == "exact" else "topk_ivf",
+                           t0, nodes.shape[0])
         return out
+
+    def _probe_cells(self, q, nprobe: Optional[int]) -> np.ndarray:
+        """The `nprobe` quantizer cells nearest each query (nq, nprobe)
+        — shared across shards so every shard scores the same cells.
+        Cosine similarity ties break to the ascending cell id (stable
+        argsort), keeping probe choice deterministic."""
+        if nprobe is None:
+            nprobe = self.nprobe
+        if nprobe is None:
+            from repro.index import DEFAULT_NPROBE
+            nprobe = DEFAULT_NPROBE
+        nprobe = max(1, min(int(nprobe), self.store.K))
+        sims = np.asarray(q @ self._index_cn.T)
+        return np.argsort(-sims, axis=1, kind="stable")[:, :nprobe] \
+            .astype(np.int32)
 
     def _record_query(self, kind: str, t0: float, batch: int) -> None:
         """One histogram + counter pair per read, labeled by kind —
@@ -706,6 +855,20 @@ class ServingEngine:
                    "health": self.health()}
             if self.loop_error is not None:
                 out["loop_error"] = repr(self.loop_error)
+            if self.index_mode is not None:
+                from repro.index import DEFAULT_NPROBE
+                out["index"] = {
+                    "mode": self.index_mode,
+                    "nprobe": (self.nprobe if self.nprobe is not None
+                               else DEFAULT_NPROBE),
+                    "churn_threshold": self.index_churn,
+                    "moved_rows": self._index_moved,
+                    "moved_fraction": self._index_moved / max(self.n, 1),
+                    "requantizes": self.requantizes,
+                    # per-shard rows-per-cell occupancy (sums to n)
+                    "cell_sizes": [s.index.cell_sizes().tolist()
+                                   for s in self.shards
+                                   if s.index is not None]}
             if self.data_dir is not None:
                 out["durability"] = {
                     "generation": self.generation,

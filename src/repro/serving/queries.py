@@ -20,11 +20,28 @@ see the (n/p, K) local slice plus its global `row_offset`):
   against a candidate row block living at ``row_offset`` in the global
   index space (a shard's owned slice); per-shard results merge exactly
   because scores are global-id-stamped.
+* ``topk_cosine_ids``    — same, but for **gathered** candidate rows
+  with explicit (ascending) global ids — the IVF index's per-cell
+  scorer (`repro.index`), where a cell's rows are not contiguous.
 * ``class_sums``         — per-class (sums, counts) over a row slice;
   the engine reduces slices and divides once, so merged centroids
   equal the single-host ``class_centroids``.
 * ``predict_rows``       — centroid prediction from gathered rows
   (the engine gathers rows from owning shards first).
+
+**Tie-breaking contract (bit-stable results).**  Every top-k surface
+here orders candidates lexicographically by ``(-score, ascending
+global id)``.  Inside the blocked scans this falls out of two
+invariants rather than an explicit composite sort: ``lax.top_k``
+breaks value ties in favor of the lower input position, and candidates
+are always presented in ascending-global-id order (blocks scan rows in
+id order; the running top-k — itself tie-ordered by id, inductively —
+is concatenated *before* the new block, whose ids are all larger).
+``merge_topk`` gets parts whose id ranges interleave (shards, IVF
+cells), so it sorts explicitly and is order-invariant in its inputs.
+The payoff: sharded, single-host, and IVF answers are **bit-identical**
+(not merely tie-tolerant), which is what lets the IVF index be tested
+for exact equality against the full scan at ``nprobe=K``.
 
 Kernels are pure functions of (Z, ...) so they jit once per shape and
 stay valid across versions/epochs — the service just passes its
@@ -86,12 +103,17 @@ def predict_labels(Z, centroids, nodes):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "exclude_self"))
-def _topk_block(vals, idxs, q, block, base, n, qnodes, *,
+def _topk_block(vals, idxs, q, block, gidx, qnodes, *,
                 exclude_self: bool, k: int):
-    """Merge one candidate block into the running (vals, idxs) top-k."""
+    """Merge one candidate block into the running (vals, idxs) top-k.
+
+    `gidx` carries each block row's global id (-1 for padding rows,
+    which are masked out).  The running candidates are concatenated
+    BEFORE the block: with blocks presented in ascending-id order and
+    ``lax.top_k``'s lower-position-wins tie rule, score ties resolve to
+    the ascending global id (see the module tie-breaking contract)."""
     scores = q @ block.T                                   # (q, B)
-    gidx = base + jnp.arange(block.shape[0])               # (B,)
-    mask = gidx[None, :] >= n                              # zero-padded tail
+    mask = gidx[None, :] < 0                               # padding rows
     if exclude_self:
         mask = mask | (gidx[None, :] == qnodes[:, None])
     scores = jnp.where(mask, -jnp.inf, scores)
@@ -100,6 +122,43 @@ def _topk_block(vals, idxs, q, block, base, n, qnodes, *,
         [idxs, jnp.broadcast_to(gidx, scores.shape)], 1)
     v, sel = jax.lax.top_k(cat_v, k)
     return v, jnp.take_along_axis(cat_i, sel, 1)
+
+
+def _topk_blocked(Zn_rows, ids, q, qnodes, *, k: int, block_rows: int,
+                  exclude_self: bool):
+    """Shared blocked scan: score `q` against candidate rows carrying
+    global ids `ids` (ascending), k+block at a time."""
+    m = Zn_rows.shape[0]
+    qnodes = jnp.asarray(np.asarray(qnodes, np.int32))
+    nq = q.shape[0]
+    vals = jnp.full((nq, k), -jnp.inf, Zn_rows.dtype)
+    idxs = jnp.full((nq, k), -1, jnp.int32)
+    # single-block inputs pad to a power-of-two bucket (one compile per
+    # bucket for the IVF path's varying cell sizes); multi-block scans
+    # pad only the tail to the fixed block shape
+    bucket = block_rows if m > block_rows else \
+        min(block_rows, _pow2(max(m, 1)))
+    for base in range(0, max(m, 1), bucket):
+        block = Zn_rows[base:min(base + bucket, m)]
+        gidx = ids[base:min(base + bucket, m)]
+        if block.shape[0] < bucket:
+            pad = bucket - block.shape[0]
+            block = jnp.pad(block, ((0, pad), (0, 0)))
+            gidx = np.concatenate([gidx, np.full(pad, -1, np.int32)])
+        vals, idxs = _topk_block(vals, idxs, q, block,
+                                 jnp.asarray(gidx), qnodes,
+                                 exclude_self=exclude_self, k=k)
+    # entries never filled (k > candidate count) keep idx -1 / -inf
+    valid = jnp.isfinite(vals)
+    idxs = jnp.where(valid, idxs, -1)
+    return np.asarray(idxs), np.asarray(vals)
+
+
+def _pow2(size: int) -> int:
+    b = 1
+    while b < size:
+        b <<= 1
+    return b
 
 
 def topk_cosine_q(Zn_rows, q, qnodes, *, k: int = 10,
@@ -111,40 +170,53 @@ def topk_cosine_q(Zn_rows, q, qnodes, *, k: int = 10,
 
     The sharded engine's scatter half: each shard scores the SAME query
     vectors against its owned slice, results carry global ids, and a
-    per-query ``lax.top_k`` over the concatenated per-shard candidates
-    is exactly the global answer.  `qnodes` are global query node ids
-    for self-exclusion (pass exclude_self=False to keep them).  Returns
-    (indices (q, k) int32, scores (q, k) float32) as numpy."""
+    per-query merge over the concatenated per-shard candidates is
+    exactly the global answer.  `qnodes` are global query node ids
+    for self-exclusion (pass exclude_self=False to keep them).  Score
+    ties break by ascending global id (bit-stable across shard counts);
+    when k exceeds the candidate count the tail is clamped to
+    idx -1 / score -inf.  Returns (indices (q, k) int32,
+    scores (q, k) float32) as numpy."""
     m = Zn_rows.shape[0]
-    qnodes = jnp.asarray(np.asarray(qnodes, np.int32))
-    nq = q.shape[0]
-    vals = jnp.full((nq, k), -jnp.inf, Zn_rows.dtype)
-    idxs = jnp.full((nq, k), -1, jnp.int32)
-    hi = row_offset + m
-    for base in range(0, m, block_rows):
-        block = Zn_rows[base:min(base + block_rows, m)]
-        if block.shape[0] < block_rows and base > 0:
-            # pad the tail block so the jitted kernel sees one shape
-            pad = block_rows - block.shape[0]
-            block = jnp.pad(block, ((0, pad), (0, 0)))
-        vals, idxs = _topk_block(vals, idxs, q, block, row_offset + base,
-                                 hi, qnodes, exclude_self=exclude_self,
-                                 k=k)
-    # entries never filled (k > candidate count) keep idx -1 / -inf
-    valid = jnp.isfinite(vals)
-    idxs = jnp.where(valid, idxs, -1)
-    return np.asarray(idxs), np.asarray(vals)
+    ids = (row_offset + np.arange(m)).astype(np.int32)
+    return _topk_blocked(Zn_rows, ids, q, qnodes, k=k,
+                         block_rows=block_rows,
+                         exclude_self=exclude_self)
+
+
+def topk_cosine_ids(Zn_rows, ids, q, qnodes, *, k: int = 10,
+                    block_rows: int = 1 << 14,
+                    exclude_self: bool = True):
+    """Top-k of unit-norm queries `q` against GATHERED candidate rows
+    `Zn_rows` whose global ids are `ids` — the IVF index's per-cell
+    scorer, where a cell's member rows are scattered through the owned
+    slice.  `ids` must be sorted ascending (cells store sorted member
+    lists) so score ties resolve to the ascending global id, exactly as
+    the contiguous scan does — that id-order invariant is what makes
+    probing all cells bit-identical to the full scan."""
+    ids = np.asarray(ids, np.int32)
+    return _topk_blocked(Zn_rows, ids, q, qnodes, k=k,
+                         block_rows=block_rows,
+                         exclude_self=exclude_self)
 
 
 def merge_topk(idx_parts, val_parts, *, k: int):
-    """Merge per-shard (idx, val) top-k candidate lists into the global
-    top-k (the gather half of the scatter/gather query).  Concatenates
-    along the candidate axis and re-top-ks; unfilled slots (idx -1,
-    -inf) lose to any real candidate."""
+    """Merge per-part (idx, val) top-k candidate lists into the global
+    top-k (the gather half of the scatter/gather query, and the IVF
+    index's cross-cell merge).  Candidates are ordered lexicographically
+    by ``(-score, ascending global id)`` via a stable double argsort,
+    so the result is bit-stable and INVARIANT in the part order —
+    shards and probed cells can arrive however they like.  Unfilled
+    slots (idx -1, -inf) lose to any real candidate; a merge with fewer
+    than k real candidates keeps the -1 / -inf clamp in its tail."""
     cat_v = jnp.concatenate([jnp.asarray(v) for v in val_parts], 1)
     cat_i = jnp.concatenate([jnp.asarray(i) for i in idx_parts], 1)
-    v, sel = jax.lax.top_k(cat_v, k)
-    i = jnp.take_along_axis(cat_i, sel, 1)
+    order = jnp.argsort(cat_i, axis=1)            # secondary: id asc
+    v = jnp.take_along_axis(cat_v, order, 1)
+    i = jnp.take_along_axis(cat_i, order, 1)
+    order = jnp.argsort(-v, axis=1)               # primary: score desc
+    v = jnp.take_along_axis(v, order, 1)[:, :k]   # (stable: ties keep
+    i = jnp.take_along_axis(i, order, 1)[:, :k]   # the id order)
     valid = jnp.isfinite(v)
     return (np.asarray(jnp.where(valid, i, -1)), np.asarray(v))
 

@@ -14,7 +14,11 @@ epoch.
 `--data-dir` makes the engine durable (WAL + snapshots) and finishes
 with a crash-recovery self-check: reopen the deployment from disk and
 verify the exact `(version, epoch, fingerprint)` triple plus Z against
-the live engine.
+the live engine.  `--index ivf [--nprobe N]` serves top-k through the
+delta-maintained IVF index (`repro.index`) and adds two self-checks:
+ivf@nprobe=K must equal the exact scan bit-for-bit, and (durable runs)
+recovery must restore the same quantizer; `--obs-dump` then also
+reports per-shard cell occupancy.
 
 Exit criteria printed at the end: per-kind throughput/latency stats,
 the version/epoch counters, and a self-check that the delta-maintained
@@ -69,6 +73,15 @@ def main(argv=None):
     ap.add_argument("--compact-every", type=int, default=10)
     ap.add_argument("--rebuild-churn", type=float, default=0.05)
     ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--index", choices=["ivf"], default=None,
+                    help="serve top-k through the delta-maintained IVF "
+                         "index (repro.index) instead of full scans")
+    ap.add_argument("--nprobe", type=int, default=None,
+                    help="IVF cells probed per query (default: "
+                         "repro.index.DEFAULT_NPROBE)")
+    ap.add_argument("--index-churn", type=float, default=0.25,
+                    help="re-quantize the index past this moved-rows "
+                         "fraction")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--obs-dump", action="store_true",
                     help="print the metrics registry (Prometheus text "
@@ -82,8 +95,12 @@ def main(argv=None):
     store = GraphStore(g, Y, args.k)
     engine = ServingEngine(store, num_shards=args.shards,
                            rebuild_churn=args.rebuild_churn,
-                           data_dir=args.data_dir)
-    batcher = MicroBatcher(engine, topk=args.topk)
+                           data_dir=args.data_dir,
+                           index=args.index, nprobe=args.nprobe,
+                           index_churn=args.index_churn)
+    batcher = MicroBatcher(engine, topk=args.topk,
+                           topk_mode=args.index or "exact",
+                           topk_nprobe=args.nprobe)
     if not args.sync_flush:
         engine.start(batcher)
     print(f"[serve-gee] n={args.n} K={args.k} edges={args.edges:,} "
@@ -135,8 +152,26 @@ def main(argv=None):
     err = _self_check(engine)
     print(f"[serve-gee] self-check max|Z_delta - Z_rebuild| = {err:.2e}")
     assert err < 1e-3, "delta-maintained Z diverged from rebuild"
+    if args.index:
+        # probing every cell must reproduce the exact scan bit-for-bit
+        nodes = rng.integers(0, args.n, size=64).astype(np.int32)
+        ei, ev = engine.query_topk(nodes, k=args.topk, mode="exact")
+        ii, iv = engine.query_topk(nodes, k=args.topk, mode="ivf",
+                                   nprobe=args.k)
+        assert np.array_equal(ei, ii) and np.array_equal(ev, iv), \
+            "ivf@nprobe=K diverged from the exact scan"
+        istats = engine.stats()["index"]
+        print(f"[serve-gee] index: nprobe={istats['nprobe']} "
+              f"requantizes={istats['requantizes']} "
+              f"moved={istats['moved_rows']} "
+              f"(ivf@nprobe=K == exact ✓)")
     if args.obs_dump:
         print(f"[serve-gee] health: {engine.health()}")
+        if engine.index_mode is not None:
+            for sid, cells in enumerate(
+                    engine.stats()["index"]["cell_sizes"]):
+                print(f"[serve-gee] index occupancy shard {sid}: "
+                      f"{cells} (rows/cell)")
         print(obs.render_prometheus(), end="")
 
     if args.data_dir:
@@ -150,6 +185,12 @@ def main(argv=None):
               f"max|dZ|={dz:.2e}")
         assert rtriple == triple, "recovered state diverged"
         assert dz < 1e-3, "recovered Z diverged"
+        if args.index:
+            assert recovered.index_mode == engine.index_mode
+            assert np.array_equal(recovered._index_centroids,
+                                  engine._index_centroids), \
+                "recovered index quantizer diverged"
+            print("[serve-gee] recovery: index quantizer restored ✓")
         recovered.close()
     return err
 

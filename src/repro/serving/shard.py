@@ -60,6 +60,10 @@ class EmbeddingShard:
                                          if self.owned_only else None)),
             backend=backend, plan_cache=plan_cache)
         self._Zn: Optional[jnp.ndarray] = None
+        #: optional IVF index over the owned slice (engine-managed:
+        #: the engine owns the shared quantizer centroids and the
+        #: churn-gated re-quantization policy; `build_index` creates it)
+        self._index = None
 
     # -- write path --------------------------------------------------------
 
@@ -140,6 +144,38 @@ class EmbeddingShard:
         `q` — global-id-stamped, ready for `queries.merge_topk`."""
         return Q.topk_cosine_q(self.normalized(), q, qnodes, k=k,
                                block_rows=block_rows, row_offset=self.lo)
+
+    # -- IVF index over the owned slice (repro.index) ----------------------
+
+    @property
+    def index(self):
+        """The shard's `IVFIndex`, or None when indexing is off."""
+        return self._index
+
+    def build_index(self, centroids) -> None:
+        """(Re)quantize the owned slice under the engine's shared
+        quantizer `centroids` — a fresh index if none exists yet."""
+        from repro.index import IVFIndex
+        if self._index is None:
+            self._index = IVFIndex(K=self.embedder.config.K,
+                                   row_offset=self.lo)
+        self._index.build(self.normalized(), centroids)
+
+    def update_index(self, touched_global: np.ndarray) -> int:
+        """Delta-maintain the index for GLOBAL node ids this shard owns
+        (the rows an edge batch just rewrote); returns rows that
+        changed cell (the engine's re-quantization churn signal)."""
+        if self._index is None:
+            return 0
+        local = np.asarray(touched_global, np.int64) - self.lo
+        return self._index.update_rows(self.normalized(), local)
+
+    def index_topk(self, q, qnodes, probe, *, k: int, block_rows: int):
+        """This shard's top-k candidates restricted to the probed
+        cells — same global-id-stamped contract as `topk_candidates`,
+        plus the scanned-row count for the scan-fraction metric."""
+        return self._index.topk(self.normalized(), q, qnodes, probe,
+                                k=k, block_rows=block_rows)
 
     @property
     def plan_stats(self) -> dict:

@@ -16,7 +16,11 @@ Record kinds mirror the engine's write surface:
            function of store state, so replaying the marker reproduces
            the coalesced base (and its rehashed fingerprint);
   REBUILD  an explicit rebuild (``refresh()``), which advances the
-           epoch without changing the multiset.
+           epoch without changing the multiset;
+  INDEX    an IVF (re-)quantization: the payload is the engine's
+           quantizer centroid matrix (K*K float32), so replay restores
+           the exact quantizer and the recovered index — a pure
+           function of (Z, centroids) — answers identically.
 
 On-disk format (version-stamped file header, then records):
 
@@ -47,7 +51,7 @@ _FILE_MAGIC = b"REPROWAL1\n"
 _HEADER = struct.Struct("<II")          # payload_len, crc32
 _PREFIX = struct.Struct("<BQQ")         # kind, version, count
 
-EDGES, LABELS, COMPACT, REBUILD = 1, 2, 3, 4
+EDGES, LABELS, COMPACT, REBUILD, INDEX = 1, 2, 3, 4, 5
 _MARKERS = (COMPACT, REBUILD)
 
 
@@ -55,6 +59,8 @@ _MARKERS = (COMPACT, REBUILD)
 class WalRecord:
     """One replayable mutation.  For EDGES, `a, b, c` are (u, v, w)
     with w sign-folded; for LABELS they are (nodes, labels, None);
+    for INDEX `a` is the flat float32 quantizer centroid matrix
+    (reshaped to (K, K) by the replayer — K is the engine's);
     markers carry no arrays."""
     kind: int
     version: int
@@ -75,6 +81,10 @@ def _encode(rec: WalRecord) -> bytes:
         labels = np.ascontiguousarray(rec.b, np.int32)
         count = nodes.shape[0]
         cols = nodes.tobytes() + labels.tobytes()
+    elif rec.kind == INDEX:
+        cent = np.ascontiguousarray(rec.a, np.float32).ravel()
+        count = cent.shape[0]
+        cols = cent.tobytes()
     elif rec.kind in _MARKERS:
         count, cols = 0, b""
     else:
@@ -100,6 +110,10 @@ def _decode(payload: bytes) -> WalRecord:
         nodes = np.frombuffer(body[:8 * count], np.int64)
         labels = np.frombuffer(body[8 * count:], np.int32)
         return WalRecord(kind, version, nodes, labels)
+    if kind == INDEX:
+        if len(body) != count * 4:
+            raise ValueError("INDEX record length mismatch")
+        return WalRecord(kind, version, np.frombuffer(body, np.float32))
     if kind in _MARKERS and not body:
         return WalRecord(kind, version)
     raise ValueError(f"unknown WAL record kind {kind}")
@@ -140,7 +154,8 @@ class WriteAheadLog:
     calls extend the same file.  A missing file is created empty."""
 
     _KIND_NAMES = {EDGES: "edges", LABELS: "labels",
-                   COMPACT: "compact", REBUILD: "rebuild"}
+                   COMPACT: "compact", REBUILD: "rebuild",
+                   INDEX: "index"}
 
     def __init__(self, path: str, *, fsync: bool = False):
         self.path = str(path)
@@ -222,6 +237,11 @@ class WriteAheadLog:
     def append_marker(self, kind: int, version: int) -> None:
         assert kind in _MARKERS, kind
         self._append(WalRecord(kind, version))
+
+    def append_index(self, version: int, centroids) -> None:
+        """Log an IVF (re-)quantization's centroids so recovery can
+        rebuild the same index deterministically."""
+        self._append(WalRecord(INDEX, version, centroids))
 
 
 def read_wal(path: str) -> Iterator[WalRecord]:

@@ -43,9 +43,14 @@ def rng(request):
 def topk_equivalent(idx_a, val_a, idx_b, val_b, atol=1e-5):
     """Assert two top-k answers agree, tie-tolerantly BY SCORE.
 
-    Equal-score candidates can legitimately come back in either order
-    (float scatter order, per-shard merge order), so index-exact
-    assertions are flaky in principle.  The deterministic contract:
+    NOTE: the serving kernels themselves are now bit-stable — every
+    top-k surface in `repro.serving.queries` breaks score ties by
+    ascending global id, so sharded / single-host / IVF answers from
+    the SAME Z can (and in the engine tests do) use plain
+    `np.array_equal`.  This fixture remains for cross-implementation
+    comparisons where the *scores* differ in float low bits (different
+    reduction orders: delta-folded vs rebuilt Z, gee vs gee_streaming),
+    which can legitimately reorder near-tied candidates:
 
     * the (row-wise descending) score vectors match everywhere;
     * every slot separated from BOTH neighbors by more than `atol` —
