@@ -3,7 +3,8 @@ PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-fast test-slow lint install install-dev serve-demo \
-	bench-serving bench-encoder bench-smoke obs-gate obs-snapshot
+	serve-multiproc bench-serving bench-encoder bench-smoke obs-gate \
+	obs-snapshot
 
 # Tier-1 verify: the whole suite, fail-fast.
 test:
@@ -37,6 +38,19 @@ install-dev:
 serve-demo:
 	$(PY) -m repro.serving.server --n 1000 --edges 20000 --steps 12 \
 		--shards $(SHARDS)
+
+# Multi-process smoke: 2 spawned shard worker processes + 1 WAL-tail
+# read replica over the socket transport, with WAL group commit.  The
+# driver's self-checks cover delta-vs-rebuild Z, crash-recovery
+# reconnect (fresh workers answer the pre-crash top-k), and
+# socket == in-process bit-equality; --shutdown-workers tears every
+# worker down at exit.
+serve-multiproc:
+	d=$$(mktemp -d) && \
+	$(PY) -m repro.serving.server --n 400 --k 4 --edges 3000 \
+		--steps 3 --shards 2 --transport socket --replicas 1 \
+		--data-dir $$d --sync-flush --fsync --group-commit-ms 20 \
+		--shutdown-workers; rc=$$?; rm -rf $$d; exit $$rc
 
 # Update-latency vs full re-embed + query throughput (>=1M edges),
 # plus the sharded ServingEngine path (delta fan-out, scatter/gather

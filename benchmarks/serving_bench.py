@@ -38,7 +38,8 @@ def expected_keys() -> list:
     keys = ["serving_full_rebuild", "serving_delta_1pct",
             "serving_gather_8192", "serving_predict_4096",
             "serving_topk_256", "serving_engine_delta_wal",
-            "serving_recovery_open"]
+            "serving_recovery_open", "serving_wal_fsync_each",
+            "serving_wal_group_commit"]
     for p in sorted({1, max(1, common.SHARDS)}):
         keys += [f"serving_engine_delta_p{p}",
                  f"serving_engine_topk256_p{p}",
@@ -93,6 +94,7 @@ def run() -> None:
     emit("serving_topk_256", t, f"{256 / t:,.0f}/s")
 
     _sharded_engine_section(rng, g, Y, batch)
+    _wal_group_section(rng)
 
 
 def _sharded_engine_section(rng, g, Y, batch) -> None:
@@ -138,5 +140,48 @@ def _sharded_engine_section(rng, g, Y, batch) -> None:
         emit("serving_recovery_open", t,
              f"wal_records={eng.stats()['durability']['wal_records']}")
         rec.close()
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _wal_group_section(rng) -> None:
+    """WAL group commit: append throughput with one fsync per record
+    vs. batched fsync barriers (`group_commit_bytes`).  The target is
+    >=5x — the whole point of batching the power-loss barrier."""
+    from repro.serving.wal import WriteAheadLog
+
+    appends = common.pick(400, 60)
+    b = 64                                   # edges per append
+    u = rng.integers(0, N, b).astype(np.int32)
+    v = rng.integers(0, N, b).astype(np.int32)
+    w = rng.random(b, dtype=np.float32) + 0.5
+
+    def drive(wal: WriteAheadLog) -> float:
+        wal.open()
+        t0 = time.perf_counter()
+        for i in range(appends):
+            wal.append_edges(i + 1, u, v, w)
+        wal.sync()                           # cover the final group
+        t = time.perf_counter() - t0
+        wal.close()
+        return t / appends
+
+    d = tempfile.mkdtemp(prefix="gee-bench-wal-")
+    try:
+        t_each = drive(WriteAheadLog(f"{d}/each.wal", fsync=True))
+        emit("serving_wal_fsync_each", t_each,
+             f"appends_per_s={1 / t_each:,.0f}")
+        # group bytes sized for ~32 appends per barrier
+        group = WriteAheadLog(f"{d}/group.wal", fsync=True,
+                              group_commit_bytes=32 * (b * 12 + 32))
+        t_group = drive(group)
+        speedup = t_each / t_group
+        emit("serving_wal_group_commit", t_group,
+             f"appends_per_s={1 / t_group:,.0f};"
+             f"appends_per_fsync={group.appends_per_fsync:.1f};"
+             f"speedup={speedup:.1f}x")
+        if speedup < 5:
+            print(f"# WARN wal group commit speedup {speedup:.1f}x "
+                  f"< 5x target")
     finally:
         shutil.rmtree(d, ignore_errors=True)

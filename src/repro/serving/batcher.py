@@ -122,20 +122,51 @@ class MicroBatcher:
 
     def flush(self) -> int:
         """Drain the queue: coalesced read batches between write barriers.
-        Returns the number of tickets served."""
+        Returns the number of tickets served.
+
+        Group-commit interplay: when the target's WAL batches fsync
+        barriers (``group_commit_*``), successful writes are APPLIED in
+        order as usual but their tickets are held back and released
+        only after one ``target.sync_durable()`` covering the whole
+        drain — a submitter learns its version strictly after the fsync
+        that made the write power-loss durable.  Reads still coalesce
+        between the write barriers and are never held (they see applied
+        state, same as before)."""
         with self._lock:
             batch, self._queue = self._queue, []
         served = 0
         reads: list[Ticket] = []
+        deferred: list[tuple[Ticket, int, int]] = []
+        defer = self._defer_writes()
         for t in batch:
             if t.kind in WRITE_KINDS:
                 served += self._run_reads(reads)
                 reads = []
-                served += self._run_write(t)
+                served += self._run_write(
+                    t, deferred if defer else None)
             else:
                 reads.append(t)
         served += self._run_reads(reads)
+        if deferred:
+            try:
+                self.target.sync_durable()
+            except Exception as e:       # barrier failed: the writes
+                for t, _, _ in deferred:     # are NOT durable — error
+                    self._finish(t, None, e)     # the tickets
+            else:
+                for t, version, epoch in deferred:
+                    self._finish(t, version, version=version,
+                                 epoch=epoch)
         return served
+
+    def _defer_writes(self) -> bool:
+        """Hold write tickets for a covering fsync barrier?  Only when
+        the target's WAL actually batches barriers — otherwise ticket
+        latency semantics are unchanged."""
+        wal = getattr(self.target, "wal", None)
+        return (wal is not None and getattr(wal, "group_commit", False)
+                and callable(getattr(self.target, "sync_durable",
+                                     None)))
 
     def pending(self) -> int:
         with self._lock:
@@ -144,11 +175,16 @@ class MicroBatcher:
     # -- execution ---------------------------------------------------------
 
     def _finish(self, t: Ticket, value: Any,
-                error: Optional[BaseException] = None) -> None:
+                error: Optional[BaseException] = None,
+                version: Optional[int] = None,
+                epoch: Optional[int] = None) -> None:
         t.value = value
         t.error = error
-        t.version = self.target.version
-        t.epoch = self.target.epoch
+        # deferred write tickets pass the (version, epoch) captured at
+        # APPLY time — by release time later writes may have advanced
+        # the live counters past this ticket's write
+        t.version = self.target.version if version is None else version
+        t.epoch = self.target.epoch if epoch is None else epoch
         t.latency = time.perf_counter() - t.submitted
         with self._lock:          # stats() reads under the same lock
             st = self._stats[t.kind]
@@ -183,7 +219,8 @@ class MicroBatcher:
             obs.observe("repro_serving_batcher_exec_seconds", exec_s,
                         kind=kind)
 
-    def _run_write(self, t: Ticket) -> int:
+    def _run_write(self, t: Ticket,
+                   deferred: Optional[list] = None) -> int:
         t0 = time.perf_counter()
         try:
             if t.kind == "labels":
@@ -200,7 +237,10 @@ class MicroBatcher:
             self._finish(t, None, e)  # the queue behind it
         else:
             self._count_batch(t.kind, items, time.perf_counter() - t0)
-            self._finish(t, version)
+            if deferred is not None:  # released after the fsync barrier
+                deferred.append((t, version, self.target.epoch))
+            else:
+                self._finish(t, version)
         return 1
 
     def _run_reads(self, tickets: list[Ticket]) -> int:

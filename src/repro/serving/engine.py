@@ -84,29 +84,93 @@ class ServingEngine:
                  fsync: bool = False, degraded_append_s: float = 0.5,
                  index: Optional[str] = None, index_churn: float = 0.25,
                  nprobe: Optional[int] = None,
+                 transport: str = "local",
+                 shard_addrs: Optional[list] = None,
+                 replicas: int = 0,
+                 replica_addrs: Optional[list] = None,
+                 rpc_timeout_s: float = 60.0,
+                 group_commit_ms: Optional[float] = None,
+                 group_commit_bytes: Optional[int] = None,
                  _boot: bool = True):
         if index not in (None, "ivf"):
             raise ValueError(f"unknown index mode {index!r} "
                              "(None or 'ivf')")
+        if transport not in ("local", "socket"):
+            raise ValueError(f"unknown transport {transport!r} "
+                             "('local' or 'socket')")
         self.store = store
         self.source = StoreSource(store)
         self.rebuild_churn = float(rebuild_churn)
         self.fsync = bool(fsync)
+        #: WAL group-commit knobs (fsync batching; see serving.wal) —
+        #: carried on the engine so checkpoint WAL rotation re-creates
+        #: the log with the same policy
+        self.group_commit_ms = group_commit_ms
+        self.group_commit_bytes = group_commit_bytes
         #: WAL append (write+flush[+fsync]) latency past this marks the
         #: deployment `degraded` in health() — the disk is the write
         #: path's throughput ceiling, so a slow append IS an incident
         self.degraded_append_s = float(degraded_append_s)
         self._health = HealthTracker("serving")
         self.partition = RowPartition(store.n, num_shards)
-        # n=store.n turns every proper sub-range shard into an
-        # owned-rows Embedder (row_partition): the accumulator is
-        # (n/p, K) per shard, not (n, K) — the 1-shard deployment keeps
-        # the unpartitioned single-host fast path
-        self.shards = [
-            EmbeddingShard(i, *self.partition.slice(i), K=store.K,
-                           n=store.n, chunk_size=chunk_size,
-                           backend=backend, plan_cache=plan_cache)
-            for i in range(num_shards)]
+        self.transport = transport
+        self.rpc_timeout_s = float(rpc_timeout_s)
+        #: spawned worker processes the engine owns (close() reaps)
+        self._shard_procs: list = []
+        self._replica_procs: list = []
+        #: RemoteReplica clients reads fan out across (round-robin)
+        self._replicas: list = []
+        self._replica_rr = 0
+        #: per-replica last fallback reason (health() surfaces these)
+        self._replica_events: dict = {}
+        if transport == "local":
+            if shard_addrs:
+                raise ValueError("shard_addrs requires "
+                                 "transport='socket'")
+            # n=store.n turns every proper sub-range shard into an
+            # owned-rows Embedder (row_partition): the accumulator is
+            # (n/p, K) per shard, not (n, K) — the 1-shard deployment
+            # keeps the unpartitioned single-host fast path
+            self.shards = [
+                EmbeddingShard(i, *self.partition.slice(i), K=store.K,
+                               n=store.n, chunk_size=chunk_size,
+                               backend=backend, plan_cache=plan_cache)
+                for i in range(num_shards)]
+        else:
+            # same partition, same call surface, one process boundary
+            # away: RemoteShard is call-compatible with EmbeddingShard,
+            # so everything below this point is transport-blind
+            from repro.transport.remote import RemoteShard
+            if shard_addrs is not None:
+                if len(shard_addrs) != num_shards:
+                    raise ValueError(
+                        f"{len(shard_addrs)} shard_addrs for "
+                        f"{num_shards} shards")
+                self.shards = [
+                    RemoteShard(a, i, *self.partition.slice(i),
+                                timeout_s=self.rpc_timeout_s)
+                    for i, a in enumerate(shard_addrs)]
+            else:
+                from repro.transport.procs import spawn_shard_worker
+                procs = [spawn_shard_worker(
+                    i, *self.partition.slice(i), K=store.K, n=store.n,
+                    chunk_size=chunk_size, backend=backend,
+                    plan_cache=plan_cache, wait=False)
+                    for i in range(num_shards)]
+                self.shards = []
+                for i, proc in enumerate(procs):  # one import latency,
+                    proc.handshake()              # not num_shards
+                    self._shard_procs.append(proc)
+                    self.shards.append(RemoteShard(
+                        proc.addr, i, *self.partition.slice(i),
+                        timeout_s=self.rpc_timeout_s, proc=proc))
+        if (replicas or replica_addrs) and data_dir is None and _boot:
+            raise ValueError("read replicas tail the WAL: construct "
+                             "with data_dir=... (durable) first")
+        self._pending_replicas = (replicas, replica_addrs)
+        self._chunk_size = chunk_size
+        self._backend = backend
+        self._plan_cache = plan_cache
         self.epoch = 0
         self.rebuilds = 0
         self.deltas_applied = 0
@@ -156,6 +220,7 @@ class ServingEngine:
             if index is not None:
                 self.enable_index()      # gen 0 snapshot carries it
             self._write_generation(0)
+            self._start_replicas()       # they bootstrap from gen 0
         self._health.to(SERVING)        # boot complete: starting -> serving
 
     # -- recovery ----------------------------------------------------------
@@ -166,7 +231,14 @@ class ServingEngine:
              chunk_size: int = 1 << 20, backend: str = "streaming",
              plan_cache: Union[str, None] = "auto",
              fsync: bool = False,
-             degraded_append_s: float = 0.5) -> "ServingEngine":
+             degraded_append_s: float = 0.5,
+             transport: str = "local",
+             shard_addrs: Optional[list] = None,
+             replicas: int = 0,
+             replica_addrs: Optional[list] = None,
+             rpc_timeout_s: float = 60.0,
+             group_commit_ms: Optional[float] = None,
+             group_commit_bytes: Optional[int] = None) -> "ServingEngine":
         """Recover a deployment: load the manifest's snapshot, replay
         the WAL suffix (append-before-apply means every applied
         mutation is there), and rebuild Z once at the end.  The
@@ -193,7 +265,13 @@ class ServingEngine:
                                      else float(emeta["rebuild_churn"])),
                       chunk_size=chunk_size, backend=backend,
                       plan_cache=plan_cache, fsync=fsync,
-                      degraded_append_s=degraded_append_s, _boot=False)
+                      degraded_append_s=degraded_append_s,
+                      transport=transport, shard_addrs=shard_addrs,
+                      replicas=replicas, replica_addrs=replica_addrs,
+                      rpc_timeout_s=rpc_timeout_s,
+                      group_commit_ms=group_commit_ms,
+                      group_commit_bytes=group_commit_bytes,
+                      _boot=False)
             eng.data_dir = data_dir
             eng.generation = gen
             eng.epoch = int(emeta["epoch"])
@@ -213,7 +291,9 @@ class ServingEngine:
                     imeta["centroids"], np.float32).reshape(
                         store.K, store.K)
             eng.wal = WriteAheadLog(
-                os.path.join(data_dir, f"wal-{gen}.log"), fsync=fsync)
+                os.path.join(data_dir, f"wal-{gen}.log"), fsync=fsync,
+                group_commit_ms=group_commit_ms,
+                group_commit_bytes=group_commit_bytes)
             replayed = 0
             for rec in eng.wal.open():   # replay; Z built once, after
                 eng._replay(rec)
@@ -235,6 +315,7 @@ class ServingEngine:
             obs.counter("repro_serving_recovery_replayed_total",
                         replayed)
         eng._health.to(SERVING)          # recovery complete
+        eng._start_replicas()            # bootstrap from the recovered gen
         return eng
 
     def _replay(self, rec: W.WalRecord) -> None:
@@ -407,7 +488,8 @@ class ServingEngine:
         old = self.generation
         self.wal = WriteAheadLog(
             os.path.join(self.data_dir, f"wal-{gen}.log"),
-            fsync=self.fsync)
+            fsync=self.fsync, group_commit_ms=self.group_commit_ms,
+            group_commit_bytes=self.group_commit_bytes)
         self.wal.open()
         _atomic_write_json(os.path.join(self.data_dir, _MANIFEST),
                            {"format": _FORMAT, "generation": gen})
@@ -419,6 +501,76 @@ class ServingEngine:
                     os.unlink(os.path.join(self.data_dir, name))
                 except OSError:
                     pass
+
+    def sync_durable(self) -> int:
+        """Close any open WAL commit group with one fsync barrier;
+        returns the appends it covered.  The batcher calls this before
+        releasing write tickets, so an acknowledged write is always on
+        stable storage (group commit batches the barrier, never the
+        acknowledgement contract)."""
+        if self.wal is not None:
+            return self.wal.sync()
+        return 0
+
+    # -- read replicas (transport.replica workers tailing our WAL) ---------
+
+    def _start_replicas(self) -> None:
+        """Spawn (or connect to) the replica workers recorded at
+        construction.  Called once the data_dir holds a generation the
+        replicas can bootstrap from (after the gen-0 snapshot on boot,
+        after replay on recovery)."""
+        replicas, replica_addrs = self._pending_replicas
+        self._pending_replicas = (0, None)
+        if not replicas and not replica_addrs:
+            return
+        from repro.transport.remote import RemoteReplica
+        if replica_addrs is not None:
+            self._replicas = [
+                RemoteReplica(a, timeout_s=self.rpc_timeout_s)
+                for a in replica_addrs]
+        else:
+            from repro.transport.procs import spawn_replica_worker
+            procs = [spawn_replica_worker(
+                self.data_dir, chunk_size=self._chunk_size,
+                backend=self._backend, plan_cache=self._plan_cache,
+                wait=False) for _ in range(int(replicas))]
+            for proc in procs:
+                proc.handshake()
+                self._replica_procs.append(proc)
+                self._replicas.append(RemoteReplica(
+                    proc.addr, timeout_s=self.rpc_timeout_s,
+                    proc=proc))
+
+    def _replica_read(self, method: str, nodes: np.ndarray, **kwargs):
+        """Try one replica (round-robin) for a read, pinned to the
+        router's current version.  Returns the answer, or None to fall
+        back to the owner: lag (the replica has not applied the pinned
+        version / lacks the quantizer) and transport faults (a dead
+        replica) both degrade to owner reads instead of failing the
+        request; the reason lands in `_replica_events` for health().
+        Any other remote exception (e.g. IndexError for bad node ids)
+        propagates — it is the answer, not a fault."""
+        from repro.transport.errors import (ReplicaLagError,
+                                            TransportError)
+        i = self._replica_rr % len(self._replicas)
+        self._replica_rr += 1
+        rep = self._replicas[i]
+        try:
+            out = getattr(rep, method)(nodes, min_version=self.version,
+                                       **kwargs)
+        except ReplicaLagError as e:
+            self._replica_events[i] = f"lag: {e}"
+            outcome = "lag"
+        except TransportError as e:
+            self._replica_events[i] = f"unreachable: {e}"
+            outcome = "dead"
+        else:
+            self._replica_events[i] = None
+            outcome = "ok"
+        if obs.enabled():
+            obs.counter("repro_transport_replica_reads_total",
+                        method=method, outcome=outcome)
+        return out if outcome == "ok" else None
 
     def checkpoint(self) -> dict:
         """Durable compaction: fold the log into the base, rebuild
@@ -441,10 +593,38 @@ class ServingEngine:
             return info
 
     def close(self) -> None:
-        """Stop the async loop (if running) and close the WAL."""
+        """Stop the async loop (if running), close the WAL, and tear
+        down any transport: spawned shard/replica workers are shut down
+        over RPC and reaped; workers connected via `shard_addrs` /
+        `replica_addrs` only have their connections closed (they belong
+        to whoever launched them — `shutdown_workers()` stops those
+        too)."""
         self.stop()
         if self.wal is not None:
             self.wal.close()
+        for rep in self._replicas:
+            rep.close(shutdown=rep.proc is not None)
+        self._replicas = []
+        for shard in self.shards:
+            close = getattr(shard, "close", None)
+            if callable(close):
+                close(shutdown=shard.proc is not None)
+        self._shard_procs = []
+        self._replica_procs = []
+
+    def shutdown_workers(self) -> None:
+        """Ask every REMOTE worker — including externally-launched ones
+        this engine merely connected to — to exit, then close.  The
+        explicit teardown for `--connect` deployments."""
+        for rep in self._replicas:
+            rep.close(shutdown=True)
+        self._replicas = []
+        for shard in self.shards:
+            close = getattr(shard, "close", None)
+            if callable(close):
+                close(shutdown=True)
+        self._shard_procs = []
+        self._replica_procs = []
 
     # -- writes ------------------------------------------------------------
 
@@ -612,6 +792,11 @@ class ServingEngine:
         back in request order."""
         nodes = np.atleast_1d(np.asarray(nodes, np.int32))
         t0 = obs.tick()
+        if self._replicas:
+            out = self._replica_read("embed", nodes)
+            if out is not None:
+                self._record_query("embed", t0, nodes.shape[0])
+                return out
         with self._mu:
             self._check_nodes(nodes)
             out = np.asarray(self._gather_rows(nodes))
@@ -647,6 +832,11 @@ class ServingEngine:
         (pred, score)."""
         nodes = np.atleast_1d(np.asarray(nodes, np.int32))
         t0 = obs.tick()
+        if self._replicas:
+            out = self._replica_read("predict", nodes)
+            if out is not None:
+                self._record_query("predict", t0, nodes.shape[0])
+                return out
         with self._mu:
             self._check_nodes(nodes)
             pred, score = Q.predict_rows(self._gather_rows(nodes),
@@ -675,6 +865,15 @@ class ServingEngine:
                              "('exact' or 'ivf')")
         nodes = np.atleast_1d(np.asarray(nodes, np.int32))
         t0 = obs.tick()
+        if self._replicas:
+            out = self._replica_read("topk", nodes, k=k,
+                                     block_rows=block_rows, mode=mode,
+                                     nprobe=nprobe)
+            if out is not None:
+                self._record_query(
+                    "topk" if mode == "exact" else "topk_ivf",
+                    t0, nodes.shape[0])
+                return out
         with self._mu:
             self._check_nodes(nodes)
             if mode == "ivf" and self.index_mode is None:
@@ -774,6 +973,10 @@ class ServingEngine:
         while not self._loop_stop.is_set():
             try:
                 served = self._loop_batcher.flush()
+                if self.wal is not None and self.wal.group_commit:
+                    # a write trickle must not leave its commit group
+                    # open past the group_commit_ms promise
+                    self.wal.sync_if_due()
             except Exception as e:       # engine bug: record, keep going
                 self.loop_error = e
                 served = 0
@@ -821,11 +1024,31 @@ class ServingEngine:
                     "wal append "
                     f"{self.wal.last_append_seconds * 1e3:.1f}ms > "
                     f"{self.degraded_append_s * 1e3:.1f}ms")
+            replicas = []
+            for i, rep in enumerate(self._replicas):
+                row = {"replica": i, "addr": rep.address,
+                       "last_event": self._replica_events.get(i)}
+                try:
+                    st = rep.status(timeout_s=min(
+                        2.0, self.rpc_timeout_s))
+                    row.update(
+                        version=st["version"],
+                        lag=self.version - int(st["version"]),
+                        generation=st["generation"],
+                        records_applied=st["records_applied"],
+                        tail_error=st["tail_error"])
+                except Exception as e:   # a dead replica degrades; it
+                    row["error"] = repr(e)   # must never fail health()
+                    reasons.append(f"replica {i} unreachable")
+                replicas.append(row)
             if reasons:
                 self._health.to(DEGRADED, reason="; ".join(reasons))
             elif self._health.state != STARTING:
                 self._health.to(SERVING)
-            return self._health.as_dict()
+            out = self._health.as_dict()
+            if replicas:
+                out["replicas"] = replicas
+            return out
 
     def stats(self) -> dict:
         """Introspection snapshot, read atomically under the engine
@@ -874,7 +1097,23 @@ class ServingEngine:
                     "generation": self.generation,
                     "checkpoints": self.checkpoints,
                     "wal_records": self.wal.records_appended,
-                    "wal_bytes": self.wal.bytes_written}
+                    "wal_bytes": self.wal.bytes_written,
+                    # fsync-barrier accounting: under group commit
+                    # appends_per_fsync > 1 is the whole point; 1.0
+                    # under flush-per-record fsync; 0 with fsync off
+                    "fsync": self.fsync,
+                    "group_commit": self.wal.group_commit,
+                    "fsyncs": self.wal.fsyncs,
+                    "fsync_seconds": self.wal.fsync_seconds_total,
+                    "appends_per_fsync": self.wal.appends_per_fsync,
+                    "pending_appends": self.wal.pending_appends}
+            if self.transport != "local" or self._replicas:
+                out["transport"] = {
+                    "mode": self.transport,
+                    "shard_addrs": [getattr(s, "address", "in-process")
+                                    for s in self.shards],
+                    "replica_addrs": [r.address
+                                      for r in self._replicas]}
             if obs.enabled():
                 out["metrics"] = obs.snapshot(prefix="repro_serving")
             return out

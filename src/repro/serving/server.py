@@ -13,8 +13,29 @@ epoch.
 `--shards N` runs the row-partitioned scatter/gather path;
 `--data-dir` makes the engine durable (WAL + snapshots) and finishes
 with a crash-recovery self-check: reopen the deployment from disk and
-verify the exact `(version, epoch, fingerprint)` triple plus Z against
-the live engine.  `--index ivf [--nprobe N]` serves top-k through the
+verify the exact `(version, epoch, fingerprint)` triple plus Z — and a
+held-back top-k answer — against the live engine.
+
+Multi-process deployment (`repro.transport`):
+
+* `--serve-shard HOST:PORT --shard-id I` turns THIS process into shard
+  worker I of the workload's row partition (`RowPartition(n, shards)`)
+  and serves until shut down — the manual way to stand up workers that
+  a router later `--connect`s to;
+* `--transport socket` spawns the shard workers as subprocesses;
+  `--connect addr0,addr1,...` connects to externally-launched ones
+  instead (shard count follows the address list);
+* `--replicas N` (durable runs) adds WAL-tail read replicas that serve
+  version-pinned reads with owner fallback on lag;
+* `--fsync` + `--group-commit-ms/--group-commit-bytes` batch the WAL's
+  power-loss barriers (group commit);
+* `--shutdown-workers` tears down remote workers at exit — including
+  `--connect`ed ones (the `make serve-multiproc` teardown).
+
+With `--data-dir`, socket deployments extend the recovery self-check
+to a full reconnect: the router closes, reopens from disk against
+fresh (or surviving `--connect`) workers, and must answer the same
+top-k queries identically to the pre-crash engine.  `--index ivf [--nprobe N]` serves top-k through the
 delta-maintained IVF index (`repro.index`) and adds two self-checks:
 ivf@nprobe=K must equal the exact scan bit-for-bit, and (durable runs)
 recovery must restore the same quantizer; `--obs-dump` then also
@@ -86,7 +107,52 @@ def main(argv=None):
     ap.add_argument("--obs-dump", action="store_true",
                     help="print the metrics registry (Prometheus text "
                          "format) and health state at the end")
+    ap.add_argument("--transport", choices=["local", "socket"],
+                    default="local",
+                    help="'socket' runs each shard in its own worker "
+                         "process (spawned unless --connect)")
+    ap.add_argument("--connect", default=None, metavar="ADDR,ADDR,...",
+                    help="connect to externally-launched shard workers "
+                         "instead of spawning (implies socket; shard "
+                         "count follows the list)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="WAL-tail read replica workers (needs "
+                         "--data-dir)")
+    ap.add_argument("--serve-shard", default=None, metavar="HOST:PORT",
+                    help="be shard worker --shard-id of this "
+                         "workload's row partition and serve forever")
+    ap.add_argument("--shard-id", type=int, default=0,
+                    help="which shard --serve-shard hosts")
+    ap.add_argument("--fsync", action="store_true",
+                    help="fsync WAL appends (power-loss durability)")
+    ap.add_argument("--group-commit-ms", type=float, default=None,
+                    help="batch WAL fsync barriers: max age of an "
+                         "uncovered append")
+    ap.add_argument("--group-commit-bytes", type=int, default=None,
+                    help="batch WAL fsync barriers: bytes per group")
+    ap.add_argument("--shutdown-workers", action="store_true",
+                    help="shut down remote workers at exit, including "
+                         "--connect'ed ones")
     args = ap.parse_args(argv)
+
+    if args.serve_shard is not None:
+        # become worker `--shard-id` of the (n, shards) row partition:
+        # same partition math as the router, so `--connect` lines up
+        from repro.graph.partition import RowPartition
+        from repro.transport import worker as transport_worker
+        lo, hi = RowPartition(args.n, args.shards).slice(args.shard_id)
+        return transport_worker.main([
+            "--role", "shard", "--addr", args.serve_shard,
+            "--shard-id", str(args.shard_id), "--lo", str(lo),
+            "--hi", str(hi), "--classes", str(args.k),
+            "--nodes", str(args.n)])
+
+    shard_addrs = ([a for a in args.connect.split(",") if a]
+                   if args.connect else None)
+    transport = ("socket" if (shard_addrs or
+                              args.transport == "socket") else "local")
+    if shard_addrs:
+        args.shards = len(shard_addrs)
 
     rng = np.random.default_rng(args.seed)
     g, truth = sbm(args.n, args.k, args.edges, p_in=0.85, seed=args.seed)
@@ -97,7 +163,13 @@ def main(argv=None):
                            rebuild_churn=args.rebuild_churn,
                            data_dir=args.data_dir,
                            index=args.index, nprobe=args.nprobe,
-                           index_churn=args.index_churn)
+                           index_churn=args.index_churn,
+                           transport=transport,
+                           shard_addrs=shard_addrs,
+                           replicas=args.replicas,
+                           fsync=args.fsync,
+                           group_commit_ms=args.group_commit_ms,
+                           group_commit_bytes=args.group_commit_bytes)
     batcher = MicroBatcher(engine, topk=args.topk,
                            topk_mode=args.index or "exact",
                            topk_nprobe=args.nprobe)
@@ -105,7 +177,11 @@ def main(argv=None):
         engine.start(batcher)
     print(f"[serve-gee] n={args.n} K={args.k} edges={args.edges:,} "
           f"labeled={int((Y >= 0).sum())} shards={args.shards} "
-          f"durable={bool(args.data_dir)}")
+          f"durable={bool(args.data_dir)} transport={transport}"
+          + (f" replicas={args.replicas}" if args.replicas else ""))
+    if transport == "socket":
+        for row in engine.stats()["transport"]["shard_addrs"]:
+            print(f"[serve-gee] shard worker @ {row}")
 
     inserted: list[tuple] = []     # batches eligible for later deletion
     for step in range(args.steps):
@@ -175,23 +251,69 @@ def main(argv=None):
         print(obs.render_prometheus(), end="")
 
     if args.data_dir:
-        engine.close()
-        recovered = ServingEngine.open(args.data_dir)
+        # capture everything BEFORE close: a socket engine's shards die
+        # with it, and the reconnected deployment must answer the same
+        qnodes = rng.integers(0, args.n, size=64).astype(np.int32)
+        pre = engine.query_topk(qnodes, k=args.topk, mode="exact")
+        pre_ivf = (engine.query_topk(qnodes, k=args.topk, mode="ivf",
+                                     nprobe=args.nprobe)
+                   if args.index else None)
         triple = (engine.version, engine.epoch, engine.fingerprint())
+        Z_live = np.asarray(engine.Z)
+        engine.close()
+        recovered = ServingEngine.open(args.data_dir,
+                                       transport=transport,
+                                       shard_addrs=shard_addrs)
         rtriple = (recovered.version, recovered.epoch,
                    recovered.fingerprint())
-        dz = float(jnp.max(jnp.abs(recovered.Z - engine.Z)))
+        dz = float(jnp.max(jnp.abs(recovered.Z - Z_live)))
         print(f"[serve-gee] recovery: {rtriple} vs live {triple}, "
               f"max|dZ|={dz:.2e}")
         assert rtriple == triple, "recovered state diverged"
         assert dz < 1e-3, "recovered Z diverged"
+        # indices exact; values to the same tolerance as dZ (the
+        # recovered Z is rebuilt, the live one delta-maintained)
+        post = recovered.query_topk(qnodes, k=args.topk, mode="exact")
+        assert (np.array_equal(pre[0], post[0])
+                and np.allclose(pre[1], post[1], atol=1e-4)), \
+            "reconnected deployment's top-k diverged from pre-crash"
+        print("[serve-gee] recovery: reconnected top-k identical ✓")
         if args.index:
             assert recovered.index_mode == engine.index_mode
             assert np.array_equal(recovered._index_centroids,
                                   engine._index_centroids), \
                 "recovered index quantizer diverged"
+            post_ivf = recovered.query_topk(qnodes, k=args.topk,
+                                            mode="ivf",
+                                            nprobe=args.nprobe)
+            assert (np.array_equal(pre_ivf[0], post_ivf[0])
+                    and np.allclose(pre_ivf[1], post_ivf[1],
+                                    atol=1e-4)), \
+                "reconnected deployment's ivf top-k diverged"
             print("[serve-gee] recovery: index quantizer restored ✓")
+        if transport == "socket":
+            # socket == in-process: an in-process twin recovered from
+            # the same snapshot+WAL must answer bit-for-bit equal
+            twin = ServingEngine.open(args.data_dir)
+            ti, tv = twin.query_topk(qnodes, k=args.topk, mode="exact")
+            assert (np.array_equal(post[0], ti)
+                    and np.array_equal(post[1], tv)), \
+                "socket deployment diverged from in-process twin"
+            if args.index:
+                xi, xv = twin.query_topk(qnodes, k=args.topk,
+                                         mode="ivf", nprobe=args.nprobe)
+                assert (np.array_equal(post_ivf[0], xi)
+                        and np.array_equal(post_ivf[1], xv)), \
+                    "socket ivf top-k diverged from in-process twin"
+            twin.close()
+            print("[serve-gee] socket deployment == in-process ✓")
+        if args.shutdown_workers:
+            recovered.shutdown_workers()
         recovered.close()
+    else:
+        if args.shutdown_workers:
+            engine.shutdown_workers()
+        engine.close()
     return err
 
 

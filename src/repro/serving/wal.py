@@ -33,6 +33,30 @@ every append for power-failure durability at a latency cost.  A torn
 tail — a crash mid-append — is detected by length/CRC and truncated on
 open: the WAL can lose at most the record being written, never parse
 garbage into the store.
+
+**Group commit** (``group_commit_ms`` / ``group_commit_bytes``, only
+meaningful with ``fsync=True``): instead of one fsync per append,
+records accumulate in an open *commit group* and a single fsync
+barrier covers them all — closed when the group's bytes pass
+``group_commit_bytes``, when its oldest append is older than
+``group_commit_ms`` (checked on the next append and by the engine's
+flush loop via :meth:`sync_if_due`), or explicitly via :meth:`sync`.
+Every record is still written + flushed per append, so
+append-before-apply and process-death durability are unchanged; only
+the power-loss barrier is batched.  Submitters learn their version
+only after the covering fsync: the engine's batcher finishes write
+tickets after calling the target's ``sync_durable()``, so an
+acknowledged write is always on stable storage.  ``appends_per_fsync``
+and ``fsync_seconds`` quantify the batching in ``engine.stats()`` and
+the ``repro_wal_group_*`` metric family.
+
+**Read-side tailing** (read replicas): :func:`scan_wal` returns the
+valid records *and* the byte offset they end at, and
+:func:`tail_records` resumes parsing from such an offset — a replica
+bootstraps from the owner's snapshot, replays the scan, then polls the
+tail for fresh records.  A half-flushed record at the tail simply
+reads as end-of-log and is retried on the next poll; the reader never
+writes, truncates, or holds a lock on the owner's file.
 """
 from __future__ import annotations
 
@@ -146,6 +170,48 @@ def _scan_valid(path: str) -> tuple[list[WalRecord], int]:
     return records, good
 
 
+def scan_wal(path: str) -> tuple[list[WalRecord], int]:
+    """Valid records plus the byte offset they end at — the tail
+    position a read replica resumes from with `tail_records`."""
+    records, good = _scan_valid(path)
+    if good < 0:
+        raise ValueError(f"{path} is not a WAL file")
+    return records, good
+
+
+def tail_records(path: str, offset: int) -> tuple[list[WalRecord], int]:
+    """Parse records appended after `offset` (a position previously
+    returned by `scan_wal`/`tail_records`).  A torn or half-flushed
+    record reads as end-of-log — the next poll retries from the same
+    offset.  Read-only: never truncates the live writer's file.  A file
+    shorter than `offset` (rotation raced the reader) yields nothing."""
+    records: list[WalRecord] = []
+    good = offset
+    try:
+        f = open(path, "rb")
+    except OSError:                      # rotated away mid-poll
+        return records, good
+    with f:
+        f.seek(0, os.SEEK_END)
+        if f.tell() < offset:
+            return records, good
+        f.seek(offset)
+        while True:
+            header = f.read(_HEADER.size)
+            if len(header) < _HEADER.size:
+                break
+            length, crc = _HEADER.unpack(header)
+            payload = f.read(length)
+            if len(payload) < length or zlib.crc32(payload) != crc:
+                break
+            try:
+                records.append(_decode(payload))
+            except ValueError:
+                break
+            good = f.tell()
+    return records, good
+
+
 class WriteAheadLog:
     """Append-only durable delta log (single writer).
 
@@ -157,15 +223,34 @@ class WriteAheadLog:
                    COMPACT: "compact", REBUILD: "rebuild",
                    INDEX: "index"}
 
-    def __init__(self, path: str, *, fsync: bool = False):
+    def __init__(self, path: str, *, fsync: bool = False,
+                 group_commit_ms: Optional[float] = None,
+                 group_commit_bytes: Optional[int] = None):
         self.path = str(path)
         self.fsync = bool(fsync)
+        #: group commit is an fsync-batching policy: without fsync
+        #: there is no barrier to batch, so the knobs are inert
+        self.group_commit_ms = (float(group_commit_ms)
+                                if group_commit_ms is not None else None)
+        self.group_commit_bytes = (int(group_commit_bytes)
+                                   if group_commit_bytes is not None
+                                   else None)
+        self.group_commit = self.fsync and (
+            self.group_commit_ms is not None
+            or self.group_commit_bytes is not None)
         self.records_appended = 0
         #: wall seconds of the most recent append (write+flush[+fsync])
         #: — always tracked (cheap next to the flush syscall) because
         #: the engine's health() degrades on it even with obs off
         self.last_append_seconds = 0.0
         self.last_fsync_seconds = 0.0
+        #: fsync-barrier accounting (`engine.stats()`'s wal_group row)
+        self.fsyncs = 0
+        self.fsync_seconds_total = 0.0
+        self.appends_covered = 0
+        self._pending = 0                # appends since the last barrier
+        self._pending_bytes = 0
+        self._pending_since = 0.0        # perf_counter of oldest pending
         self._f: Optional[object] = None
 
     # -- lifecycle ---------------------------------------------------------
@@ -188,6 +273,7 @@ class WriteAheadLog:
 
     def close(self) -> None:
         if self._f is not None:
+            self.sync()                  # never orphan an open group
             self._f.close()
             self._f = None
 
@@ -210,15 +296,31 @@ class WriteAheadLog:
         self._f.write(payload)
         self._f.flush()                 # survives process death
         if self.fsync:                  # survives power loss
-            tf = time.perf_counter()
-            os.fsync(self._f.fileno())
-            self.last_fsync_seconds = time.perf_counter() - tf
+            if self.group_commit:
+                # join the open commit group; the barrier comes later
+                if not self._pending:
+                    self._pending_since = t0
+                self._pending += 1
+                self._pending_bytes += _HEADER.size + len(payload)
+                if ((self.group_commit_bytes is not None
+                     and self._pending_bytes >= self.group_commit_bytes)
+                    or (self.group_commit_ms is not None
+                        and (time.perf_counter() - self._pending_since)
+                        * 1e3 >= self.group_commit_ms)):
+                    self.sync()
+            else:
+                tf = time.perf_counter()
+                os.fsync(self._f.fileno())
+                self.last_fsync_seconds = time.perf_counter() - tf
+                self.fsyncs += 1
+                self.fsync_seconds_total += self.last_fsync_seconds
+                self.appends_covered += 1
         self.last_append_seconds = time.perf_counter() - t0
         self.records_appended += 1
         if obs.enabled():
             obs.observe("repro_serving_wal_append_seconds",
                         self.last_append_seconds)
-            if self.fsync:
+            if self.fsync and not self.group_commit:
                 obs.observe("repro_serving_wal_fsync_seconds",
                             self.last_fsync_seconds)
             obs.counter("repro_serving_wal_append_bytes_total",
@@ -226,6 +328,51 @@ class WriteAheadLog:
             obs.counter("repro_serving_wal_records_total",
                         kind=self._KIND_NAMES.get(rec.kind,
                                                   str(rec.kind)))
+
+    # -- group commit (fsync batching) ------------------------------------
+
+    @property
+    def pending_appends(self) -> int:
+        """Appends flushed but not yet covered by an fsync barrier."""
+        return self._pending
+
+    @property
+    def appends_per_fsync(self) -> float:
+        """Mean records per fsync barrier — the group-commit win
+        (1.0 under flush-per-record fsync)."""
+        return self.appends_covered / self.fsyncs if self.fsyncs else 0.0
+
+    def sync(self) -> int:
+        """Close the open commit group with one fsync; returns the
+        number of appends the barrier covered.  A no-op when nothing is
+        pending (non-group mode fsyncs inline, fsync=False has no
+        power-loss contract to uphold)."""
+        if self._f is None or not self._pending:
+            return 0
+        tf = time.perf_counter()
+        os.fsync(self._f.fileno())
+        self.last_fsync_seconds = time.perf_counter() - tf
+        covered, self._pending, self._pending_bytes = self._pending, 0, 0
+        self.fsyncs += 1
+        self.fsync_seconds_total += self.last_fsync_seconds
+        self.appends_covered += covered
+        if obs.enabled():
+            obs.observe("repro_serving_wal_fsync_seconds",
+                        self.last_fsync_seconds)
+            obs.counter("repro_wal_group_fsyncs_total")
+            obs.observe("repro_wal_group_appends_per_fsync", covered)
+        return covered
+
+    def sync_if_due(self) -> int:
+        """Barrier the open group iff its oldest append has aged past
+        ``group_commit_ms`` — the engine's flush loop calls this every
+        iteration so a write trickle is never left pending for longer
+        than the knob promises."""
+        if (self._pending and self.group_commit_ms is not None
+                and (time.perf_counter() - self._pending_since) * 1e3
+                >= self.group_commit_ms):
+            return self.sync()
+        return 0
 
     def append_edges(self, version: int, u, v, w) -> None:
         """w must already be sign-folded (deletions negative)."""
