@@ -2,9 +2,9 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast test-slow lint install install-dev serve-demo \
-	serve-multiproc bench-serving bench-encoder bench-smoke obs-gate \
-	obs-snapshot
+.PHONY: test test-fast test-slow lint lint-static install install-dev \
+	serve-demo serve-multiproc bench-serving bench-encoder bench-smoke \
+	obs-gate obs-snapshot
 
 # Tier-1 verify: the whole suite, fail-fast.
 test:
@@ -20,9 +20,16 @@ test-fast:
 test-slow:
 	$(PY) -m pytest -x -q -m slow
 
-# Style/defect gate (ruff; `make install-dev` provides it).
-lint:
+# Style/defect gate (ruff; `make install-dev` provides it) + the
+# repo-specific analysis suite.
+lint: lint-static
 	$(PY) -m ruff check src tests benchmarks examples
+
+# Repo-specific static analysis (repro.analysis): lock discipline,
+# RPC retry safety, metric/span names, JAX tracer safety, WAL/codec
+# exhaustiveness.  Stdlib-only — needs neither jax nor ruff.
+lint-static:
+	$(PY) -m repro.analysis src
 
 # Editable install of the package itself. --no-build-isolation so it
 # works offline (jax/numpy are baked into dev containers; the build

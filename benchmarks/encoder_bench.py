@@ -125,7 +125,8 @@ def run() -> None:
                        plan_cache=None)
         emb.fit(src, Y)                     # warm the jit compiles
 
-        t_warm = time_it(lambda: emb.refit(Y).Z_, warmup=1, iters=iters)
+        t_warm = time_it(lambda emb=emb, Y=Y: emb.refit(Y).Z_,
+                         warmup=1, iters=iters)
 
         # direct host-side plan cost — exactly what a cache hit skips:
         # fresh array objects force a rebuild (identity cache miss),

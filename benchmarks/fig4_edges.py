@@ -34,7 +34,8 @@ def run() -> None:
     for s in common.pick(SIZES, QUICK_SIZES):
         g = erdos_renyi(n, s, seed=s, weighted=True)
         uj, vj, wj = map(jnp.asarray, (g.u, g.v, g.w))
-        t = time_it(lambda: G.gee(uj, vj, wj, Yj, K=k, n=n),
+        t = time_it(lambda uj=uj, vj=vj, wj=wj:
+                    G.gee(uj, vj, wj, Yj, K=k, n=n),
                     warmup=1, iters=3)
         xs.append(s)
         ts.append(t)

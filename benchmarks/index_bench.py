@@ -69,11 +69,13 @@ def run() -> None:
 
         nodes = rng.integers(0, n, QBATCH).astype(np.int32)
         t_exact = time_it(
-            lambda: eng.query_topk(nodes, k=10, mode="exact"))
+            lambda eng=eng, nodes=nodes:
+            eng.query_topk(nodes, k=10, mode="exact"))
         emit(f"index_topk{QBATCH}_exact_{tag}", t_exact,
              f"{QBATCH / t_exact:,.0f} q/s")
         t_ivf = time_it(
-            lambda: eng.query_topk(nodes, k=10, mode="ivf"))
+            lambda eng=eng, nodes=nodes:
+            eng.query_topk(nodes, k=10, mode="ivf"))
         nprobe = eng.stats()["index"]["nprobe"]
         speedup = t_exact / t_ivf
         emit(f"index_topk{QBATCH}_ivf_{tag}", t_ivf,

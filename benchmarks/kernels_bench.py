@@ -32,7 +32,8 @@ def run() -> None:
         g = erdos_renyi(n, s, seed=s)
         Y = make_labels(g.n, k, 0.1, rng)
         emb = Embedder(EncoderConfig(K=k), backend="xla").fit(g, Y)
-        t = time_it(lambda: emb.refit(Y).Z_, warmup=1, iters=3)
+        t = time_it(lambda emb=emb, Y=Y: emb.refit(Y).Z_,
+                    warmup=1, iters=3)
         emit(f"kernels/gee_xla_scatter/s{s}", t,
              f"edges_per_s={s / t:,.0f}")
 

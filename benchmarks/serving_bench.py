@@ -111,11 +111,12 @@ def _sharded_engine_section(rng, g, Y, batch) -> None:
     for p in sorted({1, max(1, common.SHARDS)}):
         eng = ServingEngine(GraphStore(g, Y, K), num_shards=p,
                             plan_cache=None)
-        t = time_it(lambda: eng.apply_edge_delta(du, dv, dw))
+        t = time_it(lambda eng=eng: eng.apply_edge_delta(du, dv, dw))
         emit(f"serving_engine_delta_p{p}", t,
              f"batch={du.shape[0]};edges_per_s={du.shape[0] / t:,.0f}")
-        t = time_it(lambda: eng.query_topk(qnodes, k=10,
-                                           block_rows=1 << 15), iters=2)
+        t = time_it(lambda eng=eng: eng.query_topk(qnodes, k=10,
+                                                   block_rows=1 << 15),
+                    iters=2)
         emit(f"serving_engine_topk256_p{p}", t, f"{256 / t:,.0f}/s")
         # owned-rows memory win: peak per-shard accumulator bytes
         # should track ceil(n/p)*K*4, i.e. ~1/p of the full Z

@@ -59,7 +59,8 @@ def run() -> None:
         # interpreted python loop — only on the smallest graph (paper's
         # GEE-Python column took 56 min on Friendster; same reason)
         if s <= 100_000:
-            t_py = time_it(lambda: R.gee_python(g.u, g.v, g.w, Y, K_, n),
+            t_py = time_it(lambda g=g, Y=Y, n=n:
+                           R.gee_python(g.u, g.v, g.w, Y, K_, n),
                            warmup=0, iters=1)
             emit(f"table1/{name}/python_loop", t_py, f"s={s}")
         else:
@@ -68,12 +69,14 @@ def run() -> None:
         # the numpy column measures the compiled serial scatter ITSELF
         # (the paper's Numba analog), not Embedder round-trip overhead —
         # time the backend internal directly
-        t_np = time_it(lambda: R.gee_numpy(g.u, g.v, g.w, Y, K_, n),
+        t_np = time_it(lambda g=g, Y=Y, n=n:
+                       R.gee_numpy(g.u, g.v, g.w, Y, K_, n),
                        warmup=1, iters=3)
         emit(f"table1/{name}/numpy_compiled", t_np, f"s={s}")
 
         emb = Embedder(cfg, backend="xla").fit(g, Y)
-        t_jax = time_it(lambda: emb.refit(Y).Z_, warmup=1, iters=3)
+        t_jax = time_it(lambda emb=emb, Y=Y: emb.refit(Y).Z_,
+                        warmup=1, iters=3)
         d = f"s={s};speedup_vs_numpy={t_np / t_jax:.2f}"
         if t_py:
             d += f";speedup_vs_python={t_py / t_jax:.1f}"

@@ -1,0 +1,10 @@
+"""Repo-specific static analysis (stdlib-only; never imports jax).
+
+Run as ``python -m repro.analysis [--json] [paths...]`` or via
+``make lint-static``.  See `repro.analysis.core` for the framework and
+waiver syntax, `repro.analysis.checkers` for the active suite.
+"""
+from repro.analysis.core import (Checker, Finding, Module, Report,
+                                 run_checks)
+
+__all__ = ["Checker", "Finding", "Module", "Report", "run_checks"]

@@ -1,0 +1,50 @@
+"""CLI: ``python -m repro.analysis [--json] [paths...]``.
+
+Exit status is the CI contract: 0 when every checker is quiet (waived
+findings do not count), 1 when anything fires.  Default path is
+``src`` so the bare invocation is the repo gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.core import run_checks
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific static analysis (lock discipline, "
+                    "RPC retry safety, metric names, JAX tracer "
+                    "safety, WAL/codec exhaustiveness)")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to analyze "
+                             "(default: src)")
+    parser.add_argument("--json", action="store_true",
+                        help="machine-readable report on stdout")
+    args = parser.parse_args(argv)
+
+    report = run_checks(args.paths)
+    if args.json:
+        json.dump({"ok": report.ok,
+                   "files": report.files,
+                   "checkers": report.checkers,
+                   "waived": report.waived,
+                   "findings": [f.as_dict() for f in report.findings]},
+                  sys.stdout, indent=2)
+        sys.stdout.write("\n")
+    else:
+        for f in report.findings:
+            print(f.format())
+        status = "clean" if report.ok else \
+            f"{len(report.findings)} finding(s)"
+        print(f"repro.analysis: {status} — {report.files} file(s), "
+              f"{len(report.checkers)} checker(s), "
+              f"{report.waived} waived")
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

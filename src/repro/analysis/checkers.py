@@ -1,0 +1,27 @@
+"""The default checker suite.
+
+One place to register a new checker: import it, append an instance in
+`default_checkers`, and document the rule in the README table.  Order
+is presentation-only — findings are sorted by location before
+reporting.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.core import Checker
+from repro.analysis.lock_discipline import LockDiscipline
+from repro.analysis.metric_names import MetricNames
+from repro.analysis.retry_safety import RetrySafety
+from repro.analysis.tracer_safety import TracerSafety
+from repro.analysis.wal_exhaustive import WalExhaustive
+
+
+def default_checkers() -> List[Checker]:
+    return [
+        LockDiscipline(),
+        RetrySafety(),
+        MetricNames(),
+        TracerSafety(),
+        WalExhaustive(),
+    ]

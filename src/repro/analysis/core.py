@@ -1,0 +1,197 @@
+"""Shared framework for the repo-specific static-analysis suite.
+
+Every checker (`repro.analysis.checkers`) operates on pre-parsed
+`Module` objects — source text, AST, and the per-line comment map the
+annotation conventions live in — and yields `Finding`s.  `run_checks`
+loads the modules once, fans them through every registered checker,
+and applies the inline waiver discipline:
+
+    # repro: allow(<rule>) — <one-line reason>
+
+on the finding's line (or the line directly above it) suppresses that
+rule there.  The reason is mandatory: a waiver without one is itself a
+finding (rule ``waiver``), so every suppression in the tree carries a
+written justification a reviewer can audit.
+
+The suite is stdlib-only (``ast`` + ``tokenize``) and never imports
+the code under analysis, so it runs anywhere — including CI lanes
+without jax installed — in well under a second for this tree.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence
+
+#: ``# repro: allow(rule) — reason``; the dash may be -, -- or —
+_WAIVER_RE = re.compile(
+    r"#\s*repro:\s*allow\(\s*([a-z0-9_-]+)\s*\)\s*(?:[-—–]+\s*(.*\S))?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+    rule: str
+    path: str            # repo-relative where possible
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def as_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path,
+                "line": self.line, "message": self.message}
+
+
+@dataclass
+class Waiver:
+    rule: str
+    line: int
+    reason: Optional[str]
+    used: bool = False
+
+
+class Module:
+    """One parsed source file: AST + the comment map annotations use."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.name = os.path.basename(path)
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        #: line number -> full comment text (from tokenize, so a '#'
+        #: inside a string literal can never masquerade as a comment)
+        self.comments: Dict[int, str] = {}
+        try:
+            for tok in tokenize.generate_tokens(
+                    io.StringIO(source).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except (tokenize.TokenError, IndentationError):
+            pass
+        self.waivers: List[Waiver] = [
+            Waiver(m.group(1), line, m.group(2))
+            for line, text in self.comments.items()
+            if (m := _WAIVER_RE.search(text)) is not None]
+
+    def comment_block_at(self, line: int) -> str:
+        """The comment on `line` plus any contiguous comment-only lines
+        directly above it — the span an annotation may live in."""
+        parts = []
+        if line in self.comments:
+            parts.append(self.comments[line])
+        above = line - 1
+        while above in self.comments and \
+                self.lines[above - 1].lstrip().startswith("#"):
+            parts.append(self.comments[above])
+            above -= 1
+        return "\n".join(parts)
+
+    def comments_in(self, lo: int, hi: int) -> str:
+        """All comment text on lines [lo, hi] joined."""
+        return "\n".join(self.comments[i] for i in range(lo, hi + 1)
+                         if i in self.comments)
+
+
+@dataclass
+class Report:
+    findings: List[Finding] = field(default_factory=list)
+    waived: int = 0
+    files: int = 0
+    checkers: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+class Checker:
+    """Base: subclasses set `name` and implement `check(modules)`.
+
+    Checkers see the WHOLE module list (cross-module rules like twin
+    signature compatibility and WAL replay exhaustiveness need it)."""
+
+    name: str = "checker"
+
+    def check(self, modules: Sequence[Module]) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+def iter_py_files(paths: Iterable[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if not d.startswith((".", "__pycache__")))
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+
+def load_modules(paths: Iterable[str]) -> (List[Module], List[Finding]):
+    modules, findings = [], []
+    for path in iter_py_files(paths):
+        rel = os.path.relpath(path)
+        try:
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+            modules.append(Module(rel, source))
+        except (SyntaxError, UnicodeDecodeError, OSError) as e:
+            lineno = getattr(e, "lineno", None) or 0
+            findings.append(Finding("parse", rel, lineno,
+                                    f"could not analyze: {e}"))
+    return modules, findings
+
+
+def apply_waivers(modules: Sequence[Module],
+                  findings: List[Finding]) -> (List[Finding], int):
+    """Drop findings covered by a same-or-previous-line waiver for the
+    same rule; emit `waiver` findings for reason-less waivers."""
+    by_path: Dict[str, List[Waiver]] = {m.path: m.waivers
+                                        for m in modules}
+    kept: List[Finding] = []
+    waived = 0
+    for f in findings:
+        hit = None
+        for w in by_path.get(f.path, ()):
+            if w.rule == f.rule and w.line in (f.line, f.line - 1):
+                hit = w
+                break
+        if hit is not None and hit.reason:
+            hit.used = True
+            waived += 1
+        else:
+            kept.append(f)
+    for m in modules:
+        for w in m.waivers:
+            if not w.reason:
+                kept.append(Finding(
+                    "waiver", m.path, w.line,
+                    f"waiver for '{w.rule}' has no reason — write "
+                    "'# repro: allow(" + w.rule + ") — <why>'"))
+    return kept, waived
+
+
+def run_checks(paths: Sequence[str],
+               checkers: Optional[Sequence[Checker]] = None) -> Report:
+    """Load every .py under `paths`, run the checker suite, apply
+    waivers.  Returns a `Report`; `report.ok` is the CI gate."""
+    if checkers is None:
+        from repro.analysis.checkers import default_checkers
+        checkers = default_checkers()
+    modules, findings = load_modules(paths)
+    for checker in checkers:
+        findings.extend(checker.check(modules))
+    findings, waived = apply_waivers(modules, findings)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return Report(findings=findings, waived=waived, files=len(modules),
+                  checkers=[c.name for c in checkers])

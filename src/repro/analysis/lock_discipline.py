@@ -1,0 +1,145 @@
+"""Checker: ``# guarded by:`` lock annotations are machine-enforced.
+
+The repo's threaded subsystems (serving engine, batcher, RPC, replica,
+obs registry, tracer) guard mutable state with ``threading.Lock`` /
+``RLock`` attributes.  The convention this checker enforces turns that
+from reviewer vigilance into a contract:
+
+* In ``__init__``, an attribute assignment carrying ``# guarded by:
+  _mu`` (on its line or the comment block directly above) declares
+  that ``self.<attr>`` may only be touched while ``self._mu`` is held.
+* A method whose def-line/leading comments carry ``# holds: _mu``
+  asserts every caller already holds the lock (private helpers called
+  from locked public methods, or boot-path code running before the
+  object is shared).  Multiple locks: ``# holds: _mu, _replica_mu``.
+* ``__init__`` itself is exempt — construction happens-before any
+  publication to other threads.
+
+Held-lock scope is lexical: ``with self._mu:`` (including multi-item
+``with self._mu, obs.span(...):``) covers its body.  Bodies of nested
+functions/lambdas do NOT inherit the scope — they may run after the
+lock is released — so guarded access inside one needs its own lock or
+a waiver.  Accesses through a non-``self`` receiver (``eng.version``)
+are outside this checker's reach; keep cross-object pokes rare.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Sequence, Tuple
+
+from repro.analysis.core import Checker, Finding, Module
+
+RULE = "lock-discipline"
+
+_GUARDED_RE = re.compile(r"guarded by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+_HOLDS_RE = re.compile(r"holds:\s*([A-Za-z_][A-Za-z0-9_, ]*)")
+
+
+def _holds_locks(mod: Module, fn: ast.FunctionDef) -> frozenset:
+    """Locks asserted held for the whole method via ``# holds:``."""
+    first = fn.body[0].lineno if fn.body else fn.lineno
+    text = mod.comments_in(fn.lineno - 1, first)
+    m = _HOLDS_RE.search(text)
+    if not m:
+        return frozenset()
+    return frozenset(name.strip() for name in m.group(1).split(",")
+                     if name.strip())
+
+
+def _with_locks(node: ast.With) -> frozenset:
+    """Lock attr names this ``with`` acquires via ``self.<lock>``."""
+    locks = set()
+    for item in node.items:
+        e = item.context_expr
+        if (isinstance(e, ast.Attribute)
+                and isinstance(e.value, ast.Name)
+                and e.value.id == "self"):
+            locks.add(e.attr)
+    return frozenset(locks)
+
+
+def _guarded_attrs(mod: Module,
+                   cls: ast.ClassDef) -> Dict[str, Tuple[str, int]]:
+    """attr -> (lock, declaration line) from ``__init__`` comments."""
+    out: Dict[str, Tuple[str, int]] = {}
+    for fn in cls.body:
+        if not (isinstance(fn, ast.FunctionDef)
+                and fn.name == "__init__"):
+            continue
+        for stmt in ast.walk(fn):
+            if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                continue
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            attrs = [t.attr for t in targets
+                     if isinstance(t, ast.Attribute)
+                     and isinstance(t.value, ast.Name)
+                     and t.value.id == "self"]
+            if not attrs:
+                continue
+            m = _GUARDED_RE.search(mod.comment_block_at(stmt.lineno))
+            if m:
+                for attr in attrs:
+                    out[attr] = (m.group(1), stmt.lineno)
+    return out
+
+
+class LockDiscipline(Checker):
+    name = RULE
+
+    def check(self, modules: Sequence[Module]) -> Iterator[Finding]:
+        for mod in modules:
+            for cls in ast.walk(mod.tree):
+                if isinstance(cls, ast.ClassDef):
+                    yield from self._check_class(mod, cls)
+
+    def _check_class(self, mod: Module,
+                     cls: ast.ClassDef) -> Iterator[Finding]:
+        guarded = _guarded_attrs(mod, cls)
+        if not guarded:
+            return
+        for fn in cls.body:
+            if not isinstance(fn, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef)):
+                continue
+            if fn.name == "__init__":
+                continue
+            held = _holds_locks(mod, fn)
+            findings: List[Finding] = []
+            for stmt in fn.body:
+                self._walk(mod, guarded, stmt, held, findings)
+            yield from findings
+
+    def _walk(self, mod: Module, guarded, node: ast.AST,
+              held: frozenset, findings: List[Finding]) -> None:
+        if isinstance(node, ast.With):
+            for item in node.items:
+                self._walk(mod, guarded, item.context_expr, held,
+                           findings)
+            inner = held | _with_locks(node)
+            for stmt in node.body:
+                self._walk(mod, guarded, stmt, inner, findings)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            # a closure may outlive the lock scope: reset to unheld
+            body = node.body if isinstance(node.body, list) \
+                else [node.body]
+            for stmt in body:
+                self._walk(mod, guarded, stmt, frozenset(), findings)
+            return
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and node.attr in guarded):
+            lock, decl = guarded[node.attr]
+            if lock not in held:
+                findings.append(Finding(
+                    RULE, mod.path, node.lineno,
+                    f"self.{node.attr} touched without holding "
+                    f"self.{lock} (declared '# guarded by: {lock}' at "
+                    f"line {decl}); wrap in 'with self.{lock}:' or "
+                    f"annotate the method '# holds: {lock}'"))
+        for child in ast.iter_child_nodes(node):
+            self._walk(mod, guarded, child, held, findings)

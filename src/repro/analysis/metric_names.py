@@ -1,0 +1,95 @@
+"""Checker: metric and span names conform at lint time, not emit time.
+
+`repro.obs` validates metric names at the emission site — a
+misspelled series raises ``ValueError`` the first time the code path
+runs.  This checker moves that to lint time: every string literal
+passed as the name to a ``counter(`` / ``gauge(`` / ``observe(`` /
+``histogram(`` call must match ``repro_<subsystem>_<metric>``
+(lowercase ``[a-z0-9_]``, >= 3 underscore-separated segments with
+``repro`` first — the same regex the registry enforces), and every
+``span(`` name must follow the dotted ``<subsystem>.<operation>``
+scheme.  A ``metric=`` keyword on ``span(`` is a metric name and is
+checked as one.
+
+Dynamic names are checked as far as they can be: an f-string name must
+begin with a literal ``repro_<...>_`` chunk; fully computed names
+(a variable or call) are skipped — keep those rare and funnel them
+through helpers that build conforming names.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, Optional, Sequence
+
+from repro.analysis.core import Checker, Finding, Module
+
+RULE = "metric-name"
+
+#: mirror of repro.obs.registry._NAME_RE — kept textual so the checker
+#: never imports the package under analysis
+METRIC_RE = re.compile(r"^repro_[a-z0-9]+(_[a-z0-9]+)+$")
+#: f-string names must open with a literal ``repro_`` family prefix
+METRIC_PREFIX_RE = re.compile(r"^repro_")
+SPAN_RE = re.compile(r"^[a-z0-9_]+(\.[a-z0-9_]+)+$")
+
+_METRIC_FUNCS = ("counter", "gauge", "observe", "histogram")
+_SPAN_FUNCS = ("span",)
+
+
+def _func_name(call: ast.Call) -> Optional[str]:
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None
+
+
+class MetricNames(Checker):
+    name = RULE
+
+    def check(self, modules: Sequence[Module]) -> Iterator[Finding]:
+        for mod in modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Call):
+                    yield from self._check_call(mod, node)
+
+    def _check_call(self, mod: Module,
+                    call: ast.Call) -> Iterator[Finding]:
+        fname = _func_name(call)
+        if fname in _METRIC_FUNCS:
+            if call.args:
+                yield from self._check_name(mod, call.args[0],
+                                            kind="metric")
+        elif fname in _SPAN_FUNCS:
+            if call.args:
+                yield from self._check_name(mod, call.args[0],
+                                            kind="span")
+            for kw in call.keywords:
+                if kw.arg == "metric":
+                    yield from self._check_name(mod, kw.value,
+                                                kind="metric")
+
+    def _check_name(self, mod: Module, node: ast.AST, *,
+                    kind: str) -> Iterator[Finding]:
+        regex = METRIC_RE if kind == "metric" else SPAN_RE
+        scheme = ("repro_<subsystem>_<metric>" if kind == "metric"
+                  else "<subsystem>.<operation> (dotted, lowercase)")
+        if isinstance(node, ast.Constant):
+            if isinstance(node.value, str) \
+                    and regex.match(node.value) is None:
+                yield Finding(
+                    RULE, mod.path, node.lineno,
+                    f"{kind} name {node.value!r} violates the "
+                    f"{scheme} scheme")
+        elif isinstance(node, ast.JoinedStr) and kind == "metric":
+            first = node.values[0] if node.values else None
+            prefix = (first.value
+                      if isinstance(first, ast.Constant)
+                      and isinstance(first.value, str) else "")
+            if METRIC_PREFIX_RE.match(prefix) is None:
+                yield Finding(
+                    RULE, mod.path, node.lineno,
+                    "f-string metric name must start with a literal "
+                    "'repro_' prefix so the series family is "
+                    "greppable")

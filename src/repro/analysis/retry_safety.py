@@ -1,0 +1,239 @@
+"""Checker: RPC retry-safety and remote/in-process twin compatibility.
+
+Two contracts keep the socket transport honest:
+
+**Retry allowlist.**  `RpcClient.call(..., idempotent=True)` opts into
+bounded retry — a timed-out request may have executed server-side, so
+retrying is only sound for read-only methods.  That property used to
+live in a hand-maintained flag at each call site; this checker pins it
+to `READ_ONLY_RPC_METHODS` below.  Any ``idempotent=True`` call whose
+method is not a string literal on the allowlist is a finding: adding a
+new retried method means adding it here, in a diff a reviewer sees
+next to the wire method itself.  Mutations (``build``, ``apply_delta``,
+``update_index``, ...) must never appear.
+
+**Twin signatures.**  A proxy class annotated
+
+    # repro: twin-of <ClassName>; extra: ping, close, address
+
+must stay call-signature-compatible with its in-process twin: every
+public method/property the proxy defines (minus the declared extras)
+must exist on the twin with a compatible signature — same positional
+order, every twin parameter accepted by name, no proxy-only required
+parameters.  Optional proxy-side additions (e.g. a ``timeout_s``
+keyword) are allowed; drift in names, order, or requiredness is a
+finding.  The twin class is looked up by name across the analyzed
+module set; if absent (running on a subtree) the check is skipped.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+from repro.analysis.core import Checker, Finding, Module
+
+RULE = "retry-safety"
+
+#: The maintained read-only RPC surface: methods that are safe to
+#: execute twice (a timed-out request can still land server-side).
+#: Every `call(..., idempotent=True)` site must name one of these.
+#: Extend ONLY for methods with no server-side state effects.
+READ_ONLY_RPC_METHODS = frozenset({
+    # shard worker reads (transport.worker.ShardHost)
+    "ping", "z_owned", "accumulator_nbytes", "rows", "normalized",
+    "class_stats", "topk_candidates", "has_index", "index_cell_sizes",
+    "index_topk", "plan_stats", "embedder_Z", "embedder_Wv",
+    # replica worker reads (transport.worker.ReplicaHost)
+    "status", "embed", "predict", "topk",
+})
+
+_TWIN_RE = re.compile(
+    r"twin-of\s+([A-Za-z_][A-Za-z0-9_]*)"
+    r"(?:\s*;\s*extra:\s*([A-Za-z0-9_,\s]+))?")
+
+#: call-method attribute names that reach RpcClient.call
+_CALL_NAMES = ("call", "_call")
+
+
+def _literal(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+class _Sig:
+    """Flattened def signature: ordered positional names, keyword-only
+    names, defaults, varargs flags."""
+
+    def __init__(self, fn: ast.FunctionDef):
+        a = fn.args
+        self.pos = [p.arg for p in a.posonlyargs + a.args]
+        if self.pos and self.pos[0] in ("self", "cls"):
+            self.pos = self.pos[1:]
+        self.kwonly = [p.arg for p in a.kwonlyargs]
+        n_def = len(a.defaults)
+        required_pos = self.pos[:len(self.pos) - n_def] \
+            if n_def else list(self.pos)
+        self.required = set(required_pos) | {
+            p.arg for p, d in zip(a.kwonlyargs, a.kw_defaults)
+            if d is None}
+        self.has_varargs = a.vararg is not None
+        self.has_kwargs = a.kwarg is not None
+        self.accepts = set(self.pos) | set(self.kwonly)
+
+
+def _is_property(fn: ast.FunctionDef) -> bool:
+    for d in fn.decorator_list:
+        if isinstance(d, ast.Name) and d.id == "property":
+            return True
+        if isinstance(d, ast.Attribute) and d.attr in (
+                "setter", "getter", "deleter"):
+            return True
+    return False
+
+
+def _class_surface(cls: ast.ClassDef) -> Dict[str, Tuple[str, object]]:
+    """name -> ("method"|"property"|"attr", def node or None) for the
+    public surface (defs, properties, and self.<attr> assignments in
+    __init__)."""
+    out: Dict[str, Tuple[str, object]] = {}
+    for node in cls.body:
+        if isinstance(node, ast.FunctionDef):
+            kind = "property" if _is_property(node) else "method"
+            out.setdefault(node.name, (kind, node))
+            if node.name == "__init__":
+                for stmt in ast.walk(node):
+                    if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                        targets = (stmt.targets
+                                   if isinstance(stmt, ast.Assign)
+                                   else [stmt.target])
+                        for t in targets:
+                            if (isinstance(t, ast.Attribute)
+                                    and isinstance(t.value, ast.Name)
+                                    and t.value.id == "self"):
+                                out.setdefault(t.attr, ("attr", None))
+    return out
+
+
+class RetrySafety(Checker):
+    name = RULE
+
+    def __init__(self, allowlist: Optional[frozenset] = None):
+        self.allowlist = (READ_ONLY_RPC_METHODS if allowlist is None
+                          else allowlist)
+
+    def check(self, modules: Sequence[Module]) -> Iterator[Finding]:
+        classes: Dict[str, Tuple[Module, ast.ClassDef]] = {}
+        for mod in modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.ClassDef):
+                    classes.setdefault(node.name, (mod, node))
+        for mod in modules:
+            yield from self._check_idempotent_sites(mod)
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.ClassDef):
+                    yield from self._check_twin(mod, node, classes)
+
+    # -- idempotent=True allowlist ----------------------------------------
+
+    def _check_idempotent_sites(self,
+                                mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _CALL_NAMES):
+                continue
+            idem = next((kw.value for kw in node.keywords
+                         if kw.arg == "idempotent"), None)
+            if idem is None:
+                continue
+            if not (isinstance(idem, ast.Constant)
+                    and idem.value is True):
+                if isinstance(idem, ast.Constant):
+                    continue             # idempotent=False: fine
+                yield Finding(
+                    RULE, mod.path, node.lineno,
+                    "idempotent= must be a literal True/False — a "
+                    "computed flag cannot be checked against the "
+                    "read-only allowlist")
+                continue
+            method = _literal(node.args[0]) if node.args else None
+            if method is None:
+                yield Finding(
+                    RULE, mod.path, node.lineno,
+                    "idempotent=True call with a non-literal method "
+                    "name — the retry allowlist needs a string "
+                    "literal to verify")
+            elif method not in self.allowlist:
+                yield Finding(
+                    RULE, mod.path, node.lineno,
+                    f"'{method}' is retried (idempotent=True) but is "
+                    "not on READ_ONLY_RPC_METHODS "
+                    "(repro.analysis.retry_safety) — retrying a "
+                    "mutation can double-apply it")
+
+    # -- twin signature compatibility --------------------------------------
+
+    def _check_twin(self, mod: Module, cls: ast.ClassDef,
+                    classes) -> Iterator[Finding]:
+        text = mod.comment_block_at(cls.lineno)
+        m = _TWIN_RE.search(text)
+        if not m:
+            return
+        twin_name = m.group(1)
+        extras = {e.strip() for e in (m.group(2) or "").split(",")
+                  if e.strip()}
+        if twin_name not in classes:
+            return                       # twin outside the analyzed set
+        twin_mod, twin_cls = classes[twin_name]
+        twin_surface = _class_surface(twin_cls)
+        for name, (kind, fn) in sorted(_class_surface(cls).items()):
+            if name.startswith("_") or name in extras:
+                continue
+            if name not in twin_surface:
+                yield Finding(
+                    RULE, mod.path,
+                    fn.lineno if fn is not None else cls.lineno,
+                    f"{cls.name}.{name} has no counterpart on twin "
+                    f"{twin_name} ({twin_mod.path}) — declare it in "
+                    "'extra:' or remove the drift")
+                continue
+            twin_kind, twin_fn = twin_surface[name]
+            if kind == "method" and twin_kind == "method":
+                yield from self._compare(mod, cls.name, twin_name,
+                                         name, fn, twin_fn)
+            elif kind == "method" or twin_kind == "method":
+                yield Finding(
+                    RULE, mod.path,
+                    fn.lineno if fn is not None else cls.lineno,
+                    f"{cls.name}.{name} is a {kind} but "
+                    f"{twin_name}.{name} is a {twin_kind} — call "
+                    "sites cannot be compatible with both")
+
+    def _compare(self, mod: Module, cname: str, tname: str, name: str,
+                 fn: ast.FunctionDef,
+                 twin_fn: ast.FunctionDef) -> Iterator[Finding]:
+        sig, tsig = _Sig(fn), _Sig(twin_fn)
+        where = f"{cname}.{name}"
+        prefix = min(len(sig.pos), len(tsig.pos))
+        if sig.pos[:prefix] != tsig.pos[:prefix]:
+            yield Finding(
+                RULE, mod.path, fn.lineno,
+                f"{where} positional parameters {sig.pos} diverge "
+                f"from twin {tname}.{name} {tsig.pos}")
+            return
+        if not sig.has_kwargs:
+            missing = sorted(tsig.accepts - sig.accepts)
+            if missing:
+                yield Finding(
+                    RULE, mod.path, fn.lineno,
+                    f"{where} does not accept twin parameter(s) "
+                    f"{missing} of {tname}.{name}")
+        extra_required = sorted(sig.required - tsig.accepts)
+        if extra_required:
+            yield Finding(
+                RULE, mod.path, fn.lineno,
+                f"{where} requires {extra_required} which twin "
+                f"{tname}.{name} does not take — existing call sites "
+                "would break")

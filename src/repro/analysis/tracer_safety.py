@@ -1,0 +1,294 @@
+"""Checker: functions traced by JAX must stay tracer-safe.
+
+A function under ``jax.jit`` (or handed to ``pallas_call``) runs once
+with abstract tracers; three habits that are fine in eager numpy break
+silently or loudly there, and this checker flags them statically:
+
+* **numpy on traced values** — ``np.<fn>(x)`` where ``x`` is a traced
+  parameter forces a concretization error at trace time (or worse,
+  silently constant-folds when it happens to work on the first trace);
+* **Python control flow on traced values** — ``if``/``while`` on a
+  tracer-derived condition raises ``TracerBoolConversionError``; use
+  ``jnp.where`` / ``lax.cond`` / ``lax.while_loop``;
+* **mutating closed-over state** — ``nonlocal``/``global`` writes, or
+  stores through a closed-over object, run once at trace time and
+  never again, a classic silent-staleness bug.
+
+What counts as traced: every parameter EXCEPT those named in the
+jit decorator's ``static_argnames`` (``static_argnums`` positions) or
+pre-bound via ``functools.partial(kernel, name=...)`` at a
+``pallas_call`` site.  Static *uses* of traced params stay legal:
+``x.shape`` / ``x.ndim`` / ``x.dtype`` / ``x.size`` are trace-time
+constants, and ``x is None`` tests dispatch on the argument structure,
+not its value — both are exempt.
+
+Recognized jit spellings: ``@jax.jit``, ``@jit``,
+``@functools.partial(jax.jit, ...)``, ``@partial(jit, ...)``,
+``name = jax.jit(fn, ...)`` where ``fn`` is a def in the same module,
+and ``pallas_call(kernel_or_partial, ...)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Checker, Finding, Module
+
+RULE = "tracer-safety"
+
+_STATIC_ATTRS = ("shape", "ndim", "dtype", "size")
+_NUMPY_NAMES = ("np", "numpy")
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    return _dotted(node) in ("jit", "jax.jit")
+
+
+def _str_elts(node: ast.AST) -> Set[str]:
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant)
+                and isinstance(e.value, str)}
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    return set()
+
+
+def _jit_static_names(call: ast.Call,
+                      fn: ast.FunctionDef) -> Set[str]:
+    """static params from jit(...) keywords (names and positions)."""
+    static: Set[str] = set()
+    params = [p.arg for p in fn.args.posonlyargs + fn.args.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            static |= _str_elts(kw.value)
+        elif kw.arg == "static_argnums":
+            nums = []
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                nums = [e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)]
+            elif isinstance(kw.value, ast.Constant):
+                nums = [kw.value.value]
+            for i in nums:
+                if isinstance(i, int) and 0 <= i < len(params):
+                    static.add(params[i])
+    return static
+
+
+def _collect_jitted(mod: Module) -> List[Tuple[ast.FunctionDef,
+                                               Set[str], str]]:
+    """(function, static param names, how-detected) for every function
+    the module jits or hands to pallas_call."""
+    defs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef):
+            defs.setdefault(node.name, node)
+    out: List[Tuple[ast.FunctionDef, Set[str], str]] = []
+    seen: Set[int] = set()
+
+    def add(fn: ast.FunctionDef, static: Set[str], how: str) -> None:
+        if id(fn) not in seen:
+            seen.add(id(fn))
+            out.append((fn, static, how))
+
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.FunctionDef):
+            for dec in node.decorator_list:
+                if _is_jit_ref(dec):
+                    add(node, set(), "@jit")
+                elif (isinstance(dec, ast.Call)
+                      and _dotted(dec.func) in ("functools.partial",
+                                                "partial")
+                      and dec.args and _is_jit_ref(dec.args[0])):
+                    add(node, _jit_static_names(dec, node),
+                        "@partial(jit)")
+        elif isinstance(node, ast.Call):
+            callee = _dotted(node.func)
+            if _is_jit_ref(node.func) and node.args:
+                target = node.args[0]
+                if isinstance(target, ast.Name) \
+                        and target.id in defs:
+                    fn = defs[target.id]
+                    add(fn, _jit_static_names(node, fn), "jit(fn)")
+            elif callee is not None \
+                    and callee.split(".")[-1] == "pallas_call" \
+                    and node.args:
+                kernel = node.args[0]
+                static: Set[str] = set()
+                if (isinstance(kernel, ast.Call)
+                        and _dotted(kernel.func) in (
+                            "functools.partial", "partial")
+                        and kernel.args):
+                    static = {kw.arg for kw in kernel.keywords
+                              if kw.arg is not None}
+                    kernel = kernel.args[0]
+                if isinstance(kernel, ast.Name) \
+                        and kernel.id in defs:
+                    add(defs[kernel.id], static, "pallas_call")
+    return out
+
+
+def _bound_names(target: ast.AST) -> Iterator[str]:
+    """Names a target expression BINDS: bare names and tuple/list
+    unpacking — NOT the base of a subscript/attribute store, which
+    mutates an existing object rather than binding a local."""
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from _bound_names(elt)
+    elif isinstance(target, ast.Starred):
+        yield from _bound_names(target.value)
+
+
+def _local_names(fn: ast.FunctionDef) -> Set[str]:
+    """Names bound inside the function body (assignment targets, loop
+    vars, with-as, comprehension vars, nested defs)."""
+    names: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                             ast.For, ast.comprehension)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                names.update(_bound_names(t))
+        elif isinstance(node, ast.withitem) and \
+                node.optional_vars is not None:
+            names.update(_bound_names(node.optional_vars))
+        elif isinstance(node, (ast.FunctionDef, ast.Lambda)):
+            if isinstance(node, ast.FunctionDef):
+                names.add(node.name)
+            a = node.args
+            names |= {p.arg for p in (a.posonlyargs + a.args
+                                      + a.kwonlyargs)}
+            if a.vararg is not None:
+                names.add(a.vararg.arg)
+            if a.kwarg is not None:
+                names.add(a.kwarg.arg)
+    return names
+
+
+def _traced_names_in(node: ast.AST, traced: Set[str],
+                     *, allow_static_attrs: bool) -> List[str]:
+    """Traced parameter names used *by value* inside `node`.  A name
+    only reached through a static attribute (``x.shape``...) or an
+    ``is None`` test does not count."""
+    hits: List[str] = []
+
+    def walk(n: ast.AST) -> None:
+        if isinstance(n, ast.Attribute) and allow_static_attrs \
+                and n.attr in _STATIC_ATTRS:
+            return                       # x.shape etc: static
+        if isinstance(n, ast.Compare) \
+                and all(isinstance(op, (ast.Is, ast.IsNot))
+                        for op in n.ops):
+            return                       # x is None: structural
+        if isinstance(n, ast.Call):
+            fname = _dotted(n.func)
+            if fname in ("isinstance", "len"):
+                return                   # static under jit
+        if isinstance(n, ast.Name) and n.id in traced:
+            hits.append(n.id)
+        for child in ast.iter_child_nodes(n):
+            walk(child)
+
+    walk(node)
+    return hits
+
+
+class TracerSafety(Checker):
+    name = RULE
+
+    def check(self, modules: Sequence[Module]) -> Iterator[Finding]:
+        for mod in modules:
+            for fn, static, how in _collect_jitted(mod):
+                yield from self._check_fn(mod, fn, static, how)
+
+    def _check_fn(self, mod: Module, fn: ast.FunctionDef,
+                  static: Set[str], how: str) -> Iterator[Finding]:
+        params = {p.arg for p in (fn.args.posonlyargs + fn.args.args
+                                  + fn.args.kwonlyargs)}
+        traced = params - static - {"self"}
+        locals_ = _local_names(fn)
+        # values derived from traced params count too (one level of
+        # assignment dataflow: x2 = f(x) makes x2 traced)
+        derived = set(traced)
+        changed = True
+        while changed:
+            changed = False
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = (node.targets
+                               if isinstance(node, ast.Assign)
+                               else [node.target])
+                    if _traced_names_in(node.value, derived,
+                                        allow_static_attrs=True):
+                        for t in targets:
+                            for nm in _bound_names(t):
+                                if nm not in derived:
+                                    derived.add(nm)
+                                    changed = True
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                callee = _dotted(node.func)
+                if (callee is not None
+                        and callee.split(".")[0] in _NUMPY_NAMES):
+                    args = list(node.args) + [kw.value
+                                              for kw in node.keywords]
+                    used = [u for a in args
+                            for u in _traced_names_in(
+                                a, derived, allow_static_attrs=True)]
+                    if used:
+                        yield Finding(
+                            RULE, mod.path, node.lineno,
+                            f"{callee}() applied to traced value(s) "
+                            f"{sorted(set(used))} inside "
+                            f"{fn.name} ({how}) — use jnp/lax; numpy "
+                            "concretizes tracers")
+            elif isinstance(node, (ast.If, ast.While)):
+                used = _traced_names_in(node.test, derived,
+                                        allow_static_attrs=True)
+                kind = ("if" if isinstance(node, ast.If) else "while")
+                if used:
+                    yield Finding(
+                        RULE, mod.path, node.lineno,
+                        f"Python `{kind}` on traced value(s) "
+                        f"{sorted(set(used))} inside {fn.name} "
+                        f"({how}) — use jnp.where / lax.cond / "
+                        "lax.while_loop, or mark the argument "
+                        "static_argnames")
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                yield Finding(
+                    RULE, mod.path, node.lineno,
+                    f"{fn.name} ({how}) mutates "
+                    f"{'/'.join(node.names)} via "
+                    f"{type(node).__name__.lower()} — traced "
+                    "functions run once at trace time; closed-over "
+                    "writes go stale")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets
+                           if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    root = t
+                    while isinstance(root, (ast.Attribute,
+                                            ast.Subscript)):
+                        root = root.value
+                    if (isinstance(root, ast.Name) and root is not t
+                            and root.id not in params
+                            and root.id not in locals_):
+                        yield Finding(
+                            RULE, mod.path, node.lineno,
+                            f"{fn.name} ({how}) stores through "
+                            f"closed-over '{root.id}' — mutation "
+                            "inside a traced function happens once "
+                            "at trace time, not per call")

@@ -1,0 +1,184 @@
+"""Checker: WAL replay and wire-codec dispatch stay exhaustive.
+
+Adding a WAL record kind or a codec value tag is a three-site edit —
+the declaration, the encoder, and every decoder/replayer — and missing
+one is silent until a crash-recovery or cross-process path exercises
+it.  Three sub-rules close that gap:
+
+* **WAL replay exhaustiveness.**  The kind registry is the all-caps
+  integer tuple in a ``wal.py`` module (``EDGES, LABELS, ... = 1,
+  ...``).  Every *replay* function — ``_replay`` on the serving engine
+  and ``_apply_live`` on the read replica (names configurable for
+  tests) — must mention every kind by name; a kind with no arm would
+  make recovery silently drop (or mis-handle via a fallthrough) that
+  mutation class.
+
+* **Codec tag coverage.**  The wire-format value tags are the ``_T_*``
+  assignments in a ``framing.py`` module.  Every tag must appear in at
+  least one ``*pack*`` function AND one ``*unpack*`` function — a tag
+  packed but never unpacked (or vice versa) is a protocol mismatch the
+  first payload of that type will hit at runtime.
+
+* **No pickle.**  The codec exists so the RPC layer never deserializes
+  attacker-controllable bytes with ``pickle``; any ``import pickle``
+  (or ``cPickle``/``dill``) in the tree is flagged.
+
+Registry/codec discovery is by file name (``wal.py`` / ``framing.py``)
+so the checker works on fixtures as well as the real tree; when no
+registry module is in the analyzed set the matching sub-rule is
+skipped rather than failed (subtree runs stay meaningful).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Sequence, Set, Tuple
+
+from repro.analysis.core import Checker, Finding, Module
+
+RULE = "wal-exhaustive"
+
+_PICKLE_MODULES = ("pickle", "cPickle", "dill")
+#: functions that must dispatch on every WAL kind
+_REPLAY_FNS = ("_replay", "_apply_live")
+
+
+def _tuple_int_consts(node: ast.Assign) -> List[Tuple[str, int]]:
+    """``A, B, C = 1, 2, 3`` (or single ``A = 1``) -> [(name, int)]."""
+    if len(node.targets) != 1:
+        return []
+    tgt, val = node.targets[0], node.value
+    if isinstance(tgt, ast.Name) and isinstance(val, ast.Constant) \
+            and isinstance(val.value, int):
+        return [(tgt.id, val.value)]
+    if isinstance(tgt, ast.Tuple) and isinstance(val, ast.Tuple) \
+            and len(tgt.elts) == len(val.elts):
+        out = []
+        for t, v in zip(tgt.elts, val.elts):
+            if isinstance(t, ast.Name) and isinstance(v, ast.Constant) \
+                    and isinstance(v.value, int):
+                out.append((t.id, v.value))
+            else:
+                return []
+        return out
+    return []
+
+
+def _wal_kinds(mod: Module) -> Dict[str, int]:
+    """All-caps integer kind names declared at wal.py module level."""
+    kinds: Dict[str, int] = {}
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign):
+            for name, value in _tuple_int_consts(node):
+                if name.isupper() and not name.startswith("_"):
+                    kinds[name] = value
+    return kinds
+
+
+def _codec_tags(mod: Module) -> Dict[str, int]:
+    """``_T_*`` tag names (-> declaration line) at framing.py module
+    level."""
+    tags: Dict[str, int] = {}
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign):
+            targets = node.targets[0].elts \
+                if (len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Tuple)) \
+                else node.targets
+            for t in targets:
+                if isinstance(t, ast.Name) and t.id.startswith("_T_"):
+                    tags[t.id] = node.lineno
+    return tags
+
+
+def _names_in(fn: ast.FunctionDef) -> Set[str]:
+    """Bare names and attribute tails referenced in a function body —
+    ``EDGES`` and ``W.EDGES`` both count as ``EDGES``."""
+    names: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name):
+            names.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            names.add(node.attr)
+    return names
+
+
+class WalExhaustive(Checker):
+    name = RULE
+
+    def __init__(self, replay_fns: Sequence[str] = _REPLAY_FNS):
+        self.replay_fns = tuple(replay_fns)
+
+    def check(self, modules: Sequence[Module]) -> Iterator[Finding]:
+        kinds: Dict[str, int] = {}
+        for mod in modules:
+            if mod.name == "wal.py":
+                kinds.update(_wal_kinds(mod))
+        for mod in modules:
+            yield from self._check_pickle(mod)
+            if kinds:
+                yield from self._check_replay(mod, kinds)
+            if mod.name == "framing.py":
+                yield from self._check_codec(mod)
+
+    # -- pickle ----------------------------------------------------------
+
+    def _check_pickle(self, mod: Module) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            bad = []
+            if isinstance(node, ast.Import):
+                bad = [a.name for a in node.names
+                       if a.name.split(".")[0] in _PICKLE_MODULES]
+            elif isinstance(node, ast.ImportFrom):
+                if node.module is not None \
+                        and node.module.split(".")[0] in _PICKLE_MODULES:
+                    bad = [node.module]
+            if bad:
+                yield Finding(
+                    RULE, mod.path, node.lineno,
+                    f"imports {bad[0]} — the transport codec "
+                    "(repro.transport.framing) exists so untrusted "
+                    "bytes are never unpickled; use it instead")
+
+    # -- replay arms ------------------------------------------------------
+
+    def _check_replay(self, mod: Module,
+                      kinds: Dict[str, int]) -> Iterator[Finding]:
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.FunctionDef)
+                    and node.name in self.replay_fns):
+                continue
+            seen = _names_in(node)
+            missing = sorted(k for k in kinds if k not in seen)
+            if missing:
+                yield Finding(
+                    RULE, mod.path, node.lineno,
+                    f"{node.name} has no arm for WAL kind(s) "
+                    f"{missing} — a replayed log containing one "
+                    "would be silently mis-handled; add an explicit "
+                    "branch (or raise) for every kind")
+
+    # -- codec tag coverage -----------------------------------------------
+
+    def _check_codec(self, mod: Module) -> Iterator[Finding]:
+        tags = _codec_tags(mod)
+        if not tags:
+            return
+        packed: Set[str] = set()
+        unpacked: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            if "unpack" in node.name:
+                unpacked |= _names_in(node) & set(tags)
+            elif "pack" in node.name:
+                packed |= _names_in(node) & set(tags)
+        for tag in sorted(set(tags) - packed):
+            yield Finding(
+                RULE, mod.path, tags[tag],
+                f"codec tag {tag} is never written by a pack "
+                "function — values of that type cannot round-trip")
+        for tag in sorted(set(tags) - unpacked):
+            yield Finding(
+                RULE, mod.path, tags[tag],
+                f"codec tag {tag} is never handled by an unpack "
+                "function — a peer sending it gets a decode error")

@@ -45,7 +45,7 @@ def dryrun_table(mesh: str) -> str:
         "collectives (AG/AR/RS/A2A/CP counts) | fits 16GB |",
         "|---|---|---|---|---|---|",
     ]
-    for key, r in recs.items():
+    for r in recs.values():
         if r.get("tag"):
             continue              # hillclimb variants live in §Perf
         if "memory_analysis" not in r:
@@ -57,7 +57,7 @@ def dryrun_table(mesh: str) -> str:
                + ma.get("temp_size_in_bytes", 0))
         c = r.get("collectives", {})
 
-        def cnt(k):
+        def cnt(k, c=c):
             return c.get(k, {}).get("count", 0)
 
         cs = (f"{cnt('all-gather')}/{cnt('all-reduce')}/"
@@ -77,7 +77,7 @@ def roofline_table(mesh: str = "pod16x16") -> str:
         "| MODEL_FLOPS | useful ratio | MFU |",
         "|---|---|---|---|---|---|---|---|---|",
     ]
-    for key, r in recs.items():
+    for r in recs.values():
         if "compute_s" not in r or r.get("tag"):
             continue
         lines.append(

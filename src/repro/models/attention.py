@@ -200,7 +200,7 @@ def attn_flash(q, k, v, q_pos, kv_pos, *, causal, window=0, scale=None,
             carry = init
             for j in range(nkv):
                 carry, _ = kv_step(carry, jax.tree_util.tree_map(
-                    lambda a: a[j], xs))
+                    lambda a, j=j: a[j], xs))
             m, l, acc = carry
         else:
             (m, l, acc), _ = jax.lax.scan(kv_step, init, xs)

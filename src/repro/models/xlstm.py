@@ -145,7 +145,7 @@ def _mlstm_chunked(q, k, v, logi, logf, chunk, state=None):
         carry, hs_list = (C0, n0, m0), []
         for i in range(nc):
             carry, hh = step(carry, jax.tree_util.tree_map(
-                lambda a: a[i], xs))
+                lambda a, i=i: a[i], xs))
             hs_list.append(hh)
         Cf, nf, mf = carry
         hs = jnp.stack(hs_list)

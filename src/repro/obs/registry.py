@@ -129,9 +129,9 @@ class MetricsRegistry:
 
     def __init__(self):
         self._mu = threading.Lock()
-        self._counters: Dict[str, Dict[Tuple, float]] = {}
-        self._gauges: Dict[str, Dict[Tuple, float]] = {}
-        self._hists: Dict[str, Dict[Tuple, _Hist]] = {}
+        self._counters: Dict[str, Dict[Tuple, float]] = {}  # guarded by: _mu
+        self._gauges: Dict[str, Dict[Tuple, float]] = {}    # guarded by: _mu
+        self._hists: Dict[str, Dict[Tuple, _Hist]] = {}     # guarded by: _mu
 
     # -- write side --------------------------------------------------------
 

@@ -43,11 +43,12 @@ class Tracer:
     def __init__(self, ring: int = 4096,
                  trace_path: Optional[str] = None):
         self._mu = threading.Lock()
-        self._ids = itertools.count(1)
+        self._ids = itertools.count(1)   # guarded by: _mu
         self._tls = threading.local()
+        # guarded by: _mu
         self.ring: collections.deque = collections.deque(maxlen=ring)
-        self._trace_path: Optional[str] = None
-        self._trace_file = None
+        self._trace_path: Optional[str] = None   # guarded by: _mu
+        self._trace_file = None          # guarded by: _mu
         self.set_sink(trace_path)
 
     # -- configuration -----------------------------------------------------
@@ -69,7 +70,8 @@ class Tracer:
 
     @property
     def trace_path(self) -> Optional[str]:
-        return self._trace_path
+        with self._mu:
+            return self._trace_path
 
     # -- span plumbing -----------------------------------------------------
 

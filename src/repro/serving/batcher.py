@@ -96,7 +96,8 @@ class MicroBatcher:
         self.topk_mode = str(topk_mode)
         self.topk_nprobe = topk_nprobe
         self._lock = threading.Lock()
-        self._queue: list[Ticket] = []
+        self._queue: list[Ticket] = []   # guarded by: _lock
+        # guarded by: _lock
         self._stats = {k: _KindStats()
                        for k in READ_KINDS + WRITE_KINDS}
 
@@ -110,6 +111,7 @@ class MicroBatcher:
     def submit(self, kind: str, payload: Any) -> Ticket:
         """Enqueue a request.  Reads: payload = node array.  Writes:
         insert/delete -> (u, v, w); labels -> (nodes, labels)."""
+        # repro: allow(lock-discipline) — membership test on a key set fixed at construction; only the values behind it mutate
         assert kind in self._stats, kind
         t = Ticket(kind, payload, time.perf_counter())
         with self._lock:

@@ -120,9 +120,13 @@ class ServingEngine:
         self._replica_procs: list = []
         #: RemoteReplica clients reads fan out across (round-robin)
         self._replicas: list = []
-        self._replica_rr = 0
+        self._replica_rr = 0             # guarded by: _replica_mu
         #: per-replica last fallback reason (health() surfaces these)
-        self._replica_events: dict = {}
+        self._replica_events: dict = {}  # guarded by: _replica_mu
+        #: serializes replica round-robin + event state so reads can
+        #: fan out WITHOUT the engine lock; ordering: _mu may be held
+        #: when taking _replica_mu (health()), never the reverse
+        self._replica_mu = threading.Lock()
         if transport == "local":
             if shard_addrs:
                 raise ValueError("shard_addrs requires "
@@ -175,30 +179,32 @@ class ServingEngine:
         self.rebuilds = 0
         self.deltas_applied = 0
         self.checkpoints = 0
-        self.version = store.version
+        self.version = store.version     # guarded by: _mu
         self.Y_epoch = store.Y.copy()
         self.data_dir: Optional[str] = None
         self.generation: Optional[int] = None
         self.wal: Optional[WriteAheadLog] = None
-        self._shard_fps: list = []
-        self._routed_for_build = None
-        self._centroids = None
+        self._shard_fps: list = []       # guarded by: _mu
+        self._routed_for_build = None    # guarded by: _mu
+        self._centroids = None           # guarded by: _mu
         #: IVF index state (repro.index): the engine owns the shared
         #: quantizer centroids (fixed between builds — that is what
         #: makes delta maintenance == rebuild) and the churn-gated
         #: re-quantization policy, mirroring `rebuild_churn`
-        self.index_mode: Optional[str] = None
+        self.index_mode: Optional[str] = None        # guarded by: _mu
         self.index_churn = float(index_churn)
         self.nprobe = int(nprobe) if nprobe is not None else None
+        # guarded by: _mu
         self._index_centroids: Optional[np.ndarray] = None
-        self._index_cn = None            # row-normalized quantizer
-        self._index_moved = 0            # rows that changed cell
+        # row-normalized quantizer — guarded by: _mu
+        self._index_cn = None
+        self._index_moved = 0   # rows that changed cell; guarded by: _mu
         self.requantizes = 0
         self._mu = threading.RLock()
         self._loop_thread: Optional[threading.Thread] = None
         self._loop_stop: Optional[threading.Event] = None
         #: last engine-level exception swallowed by the flush loop
-        self.loop_error: Optional[BaseException] = None
+        self.loop_error: Optional[BaseException] = None  # guarded by: _mu
         if not _boot:
             return                      # open() finishes construction
         if data_dir is None:
@@ -318,6 +324,7 @@ class ServingEngine:
         eng._start_replicas()            # bootstrap from the recovered gen
         return eng
 
+    # holds: _mu — recovery runs before the engine is shared
     def _replay(self, rec: W.WalRecord) -> None:
         """Re-apply one WAL record to the store and the epoch counters
         WITHOUT embedding (Z is built once after replay).  Mirrors the
@@ -357,6 +364,7 @@ class ServingEngine:
 
     # -- shard plumbing ----------------------------------------------------
 
+    # holds: _mu — called from locked write paths and the boot path
     def _reset_shard_fps(self) -> None:
         """(Re)derive each shard's sub-multiset fingerprint from the
         live store — called whenever the base arrays are rewritten
@@ -381,6 +389,7 @@ class ServingEngine:
                                    np.zeros(0, np.float32)))
             for i in range(self.partition.p)]
 
+    # holds: _mu
     def _embed_epoch(self) -> None:
         """Build every shard's Z from the live multiset under the
         current epoch labels (`Y_epoch`)."""
@@ -409,6 +418,7 @@ class ServingEngine:
             sp.fence(self.Z)
         self._invalidate_query_cache()
 
+    # holds: _mu
     def _rebuild(self) -> None:
         """Full re-embed under the store's current labels; new epoch.
         A wholesale Z rewrite invalidates every cell assignment, so an
@@ -419,6 +429,7 @@ class ServingEngine:
         if self.index_mode is not None:
             self._requantize()
 
+    # holds: _mu
     def _invalidate_query_cache(self) -> None:
         self._centroids = None
 
@@ -432,6 +443,7 @@ class ServingEngine:
                 self.index_mode = "ivf"
                 self._build_index()
 
+    # holds: _mu
     def _build_index(self, centroids=None, *, record: bool = True) -> None:
         """(Re)quantize all shards under `centroids` (default: the
         current epoch's class centroids).  On a durable engine the
@@ -461,6 +473,7 @@ class ServingEngine:
 
     # -- durability --------------------------------------------------------
 
+    # holds: _mu — checkpoint() locks; the boot path is pre-publication
     def _write_generation(self, gen: int) -> None:
         """Write snapshot + engine meta + fresh WAL, then flip the
         manifest.  Crash anywhere before the manifest replace leaves
@@ -552,20 +565,25 @@ class ServingEngine:
         propagates — it is the answer, not a fault."""
         from repro.transport.errors import (ReplicaLagError,
                                             TransportError)
-        i = self._replica_rr % len(self._replicas)
-        self._replica_rr += 1
-        rep = self._replicas[i]
+        with self._replica_mu:
+            i = self._replica_rr % len(self._replicas)
+            self._replica_rr += 1
+            rep = self._replicas[i]
         try:
+            # repro: allow(lock-discipline) — unlocked version read is a pin, not state: staleness only widens the lag window the fallback already handles
             out = getattr(rep, method)(nodes, min_version=self.version,
                                        **kwargs)
         except ReplicaLagError as e:
-            self._replica_events[i] = f"lag: {e}"
+            with self._replica_mu:
+                self._replica_events[i] = f"lag: {e}"
             outcome = "lag"
         except TransportError as e:
-            self._replica_events[i] = f"unreachable: {e}"
+            with self._replica_mu:
+                self._replica_events[i] = f"unreachable: {e}"
             outcome = "dead"
         else:
-            self._replica_events[i] = None
+            with self._replica_mu:
+                self._replica_events[i] = None
             outcome = "ok"
         if obs.enabled():
             obs.counter("repro_transport_replica_reads_total",
@@ -914,6 +932,7 @@ class ServingEngine:
                            t0, nodes.shape[0])
         return out
 
+    # holds: _mu — only called from the locked region of query_topk
     def _probe_cells(self, q, nprobe: Optional[int]) -> np.ndarray:
         """The `nprobe` quantizer cells nearest each query (nq, nprobe)
         — shared across shards so every shard scores the same cells.
@@ -978,7 +997,8 @@ class ServingEngine:
                     # open past the group_commit_ms promise
                     self.wal.sync_if_due()
             except Exception as e:       # engine bug: record, keep going
-                self.loop_error = e
+                with self._mu:
+                    self.loop_error = e
                 served = 0
             if obs.enabled():
                 obs.counter("repro_serving_flush_iterations_total")
@@ -990,7 +1010,8 @@ class ServingEngine:
                 try:
                     self.checkpoint()
                 except Exception as e:
-                    self.loop_error = e
+                    with self._mu:
+                        self.loop_error = e
                     self._checkpoint_bytes = None
             if not served:
                 self._loop_stop.wait(self._flush_interval)
@@ -1024,10 +1045,12 @@ class ServingEngine:
                     "wal append "
                     f"{self.wal.last_append_seconds * 1e3:.1f}ms > "
                     f"{self.degraded_append_s * 1e3:.1f}ms")
+            with self._replica_mu:       # ordering: _mu -> _replica_mu
+                events = dict(self._replica_events)
             replicas = []
             for i, rep in enumerate(self._replicas):
                 row = {"replica": i, "addr": rep.address,
-                       "last_event": self._replica_events.get(i)}
+                       "last_event": events.get(i)}
                 try:
                     st = rep.status(timeout_s=min(
                         2.0, self.rpc_timeout_s))

@@ -69,6 +69,7 @@ class _RemoteIndexView:
             self._shard._call("index_cell_sizes", idempotent=True))
 
 
+# repro: twin-of EmbeddingShard; extra: ping, close, address, client, proc, timeout_s
 class RemoteShard:
     """`EmbeddingShard`, one process boundary away."""
 
@@ -195,6 +196,7 @@ class RemoteShard:
             self.proc = None
 
 
+# repro: twin-of ReplicaEngine; extra: ping, address, client, proc, timeout_s
 class RemoteReplica:
     """Client for a WAL-tail replica worker.  Every method is a
     version-pinned read — all idempotent, all retried on transport

@@ -57,12 +57,18 @@ class ReplicaEngine:
         self._lock = threading.RLock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self.records_applied = 0
-        self.reloads = 0
+        self.records_applied = 0         # guarded by: _lock
+        self.reloads = 0                 # guarded by: _lock
         #: last exception the tail loop swallowed (kept serving — a
         #: replica with a sick tail is stale, not dead; version pinning
         #: turns staleness into clean owner fallbacks)
-        self.tail_error: Optional[BaseException] = None
+        self.tail_error: Optional[BaseException] = None  # guarded by: _lock
+        #: the wrapped volatile engine + tail cursor, all rewritten
+        #: together on a generation flip (_load)
+        self.engine = None               # guarded by: _lock
+        self.generation = -1             # guarded by: _lock
+        self._offset = 0                 # guarded by: _lock
+        self._wal_path = ""              # guarded by: _lock
         self._load()
         if start_tail:
             self._thread = threading.Thread(
@@ -126,7 +132,8 @@ class ReplicaEngine:
             try:
                 self.poll()
             except Exception as e:       # keep tailing; reads stay pinned
-                self.tail_error = e
+                with self._lock:
+                    self.tail_error = e
                 if obs.enabled():
                     obs.counter("repro_transport_replica_tail_errors_total")
 
@@ -137,11 +144,12 @@ class ReplicaEngine:
         applied; also callable directly for deterministic tests."""
         with open(os.path.join(self.data_dir, _MANIFEST)) as f:
             gen = int(json.load(f)["generation"])
-        if gen != self.generation:
-            self._load()
-            return 0
-        records, offset = W.tail_records(self._wal_path, self._offset)
-        with self._lock:
+        with self._lock:                 # RLock: _load re-enters fine
+            if gen != self.generation:
+                self._load()
+                return 0
+            records, offset = W.tail_records(self._wal_path,
+                                             self._offset)
             for rec in records:
                 self._apply_live(rec)
             self._offset = offset
@@ -151,6 +159,7 @@ class ReplicaEngine:
                         len(records))
         return len(records)
 
+    # holds: _lock — poll() wraps the apply batch
     def _apply_live(self, rec: W.WalRecord) -> None:
         """Feed one tailed record through the SAME public write path the
         owner ran — versions, epochs, fingerprints, and churn-gated
@@ -174,6 +183,7 @@ class ReplicaEngine:
 
     # -- version-pinned reads ---------------------------------------------
 
+    # holds: _lock — every read entry point locks before pinning
     def _pin(self, min_version: int) -> None:
         if self.engine.version < min_version:
             if obs.enabled():
@@ -226,4 +236,5 @@ class ReplicaEngine:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        self.engine.close()
+        with self._lock:                 # tail thread is gone; reads
+            self.engine.close()          # racing close get a clean cut

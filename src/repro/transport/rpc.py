@@ -81,7 +81,11 @@ class RpcServer:
         self.handler = handler
         self._lock = threading.Lock()
         self._stop = threading.Event()
-        self._threads: list[threading.Thread] = []
+        #: bookkeeping lock for the thread list — deliberately NOT
+        #: _lock, which is held across handler dispatch: accepting a
+        #: new connection must not wait out a slow RPC
+        self._tlock = threading.Lock()
+        self._threads: list[threading.Thread] = []  # guarded by: _tlock
         if path is not None:
             if os.path.exists(path):
                 os.unlink(path)
@@ -103,7 +107,8 @@ class RpcServer:
         t = threading.Thread(target=self.serve_forever,
                              name="rpc-accept", daemon=True)
         t.start()
-        self._threads.append(t)
+        with self._tlock:
+            self._threads.append(t)
         return self
 
     def serve_forever(self) -> None:
@@ -116,7 +121,8 @@ class RpcServer:
             t = threading.Thread(target=self._serve_conn, args=(conn,),
                                  name="rpc-conn", daemon=True)
             t.start()
-            self._threads.append(t)
+            with self._tlock:
+                self._threads.append(t)
 
     def _serve_conn(self, conn: socket.socket) -> None:
         """Request loop for one connection.  A torn frame, a mid-message
@@ -191,7 +197,13 @@ class RpcServer:
 
 class RpcClient:
     """One lazy connection to an RpcServer; see the module docstring
-    for the retry/reconnect policy."""
+    for the retry/reconnect policy.
+
+    Thread-safe: a lock serializes each round trip, so concurrent
+    callers (e.g. engine reads racing the health prober on one
+    RemoteReplica) can never interleave frames on the shared stream.
+    The backoff sleep between retry attempts happens OUTSIDE the lock,
+    so a retrying caller does not stall the others."""
 
     def __init__(self, addr: Union[str, Addr], *, timeout_s: float = 10.0,
                  retries: int = 2, backoff_s: float = 0.05,
@@ -201,14 +213,18 @@ class RpcClient:
         self.retries = int(retries)
         self.backoff_s = float(backoff_s)
         self._rng = rng or random.Random(0xC0FFEE)
+        #: serializes the (send, recv) round trip + connection state
+        self._lock = threading.Lock()
+        # guarded by: _lock
         self._sock: Optional[socket.socket] = None
-        self._next_id = 0
-        self.reconnects = 0
+        self._next_id = 0                # guarded by: _lock
+        self.reconnects = 0              # guarded by: _lock
 
     @property
     def address(self) -> str:
         return format_addr(self.addr)
 
+    # holds: _lock
     def _drop(self) -> None:
         if self._sock is not None:
             try:
@@ -217,6 +233,7 @@ class RpcClient:
                 pass
             self._sock = None
 
+    # holds: _lock
     def _ensure(self, timeout: float) -> socket.socket:
         if self._sock is None:
             self._sock = _connect(self.addr, timeout)
@@ -241,7 +258,9 @@ class RpcClient:
                 obs.counter("repro_transport_client_retries_total",
                             method=method)
             try:
-                value = self._call_once(method, args, kwargs, timeout)
+                with self._lock:
+                    value = self._call_once(method, args, kwargs,
+                                            timeout)
                 if obs.enabled():
                     obs.observe("repro_transport_client_seconds",
                                 obs.tock(t0), method=method)
@@ -250,7 +269,8 @@ class RpcClient:
                 return value
             except TransportError as e:
                 last = e
-                self._drop()             # never reuse a torn stream
+                with self._lock:
+                    self._drop()         # never reuse a torn stream
                 if attempt + 1 < attempts:
                     time.sleep(self.backoff_s * (2 ** attempt)
                                * (1.0 + self._rng.random()))
@@ -259,6 +279,7 @@ class RpcClient:
                         method=method, outcome="error")
         raise last if last is not None else TransportError("no attempt ran")
 
+    # holds: _lock — call() serializes each round trip
     def _call_once(self, method: str, args, kwargs, timeout: float) -> Any:
         rid = self._next_id
         self._next_id += 1
@@ -294,4 +315,5 @@ class RpcClient:
             pass
 
     def close(self) -> None:
-        self._drop()
+        with self._lock:
+            self._drop()

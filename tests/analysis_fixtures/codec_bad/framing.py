@@ -1,0 +1,20 @@
+"""wal-exhaustive violations: one-directional codec tags."""
+
+_T_INT, _T_STR = b"i", b"s"
+_T_BLOB = b"b"
+
+
+def pack_obj(out, obj):
+    if isinstance(obj, int):
+        out += _T_INT                        # _T_STR never packed
+    else:
+        out += _T_BLOB
+    return out
+
+
+def unpack_obj(tag, body):
+    if tag == _T_INT:
+        return int(body)
+    if tag == _T_STR:                        # _T_BLOB never unpacked
+        return body.decode()
+    raise ValueError(tag)

@@ -1,0 +1,6 @@
+"""wal-exhaustive violation: pickle on the wire."""
+import pickle                                # VIOLATION
+
+
+def load(blob):
+    return pickle.loads(blob)

@@ -1,0 +1,10 @@
+"""wal-exhaustive violations: a kind with no replay arm."""
+
+EDGES, LABELS, SNAPSHOT = 1, 2, 3
+
+
+def _replay(store, rec):
+    if rec.kind == EDGES:
+        store.apply_edges(rec.a, rec.b)
+    elif rec.kind == LABELS:                 # VIOLATION: no SNAPSHOT
+        store.apply_labels(rec.a)

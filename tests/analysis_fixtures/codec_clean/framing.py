@@ -1,0 +1,19 @@
+"""wal-exhaustive clean: every tag packed and unpacked."""
+
+_T_INT, _T_STR = b"i", b"s"
+
+
+def pack_obj(out, obj):
+    if isinstance(obj, int):
+        out += _T_INT
+    else:
+        out += _T_STR
+    return out
+
+
+def unpack_obj(tag, body):
+    if tag == _T_INT:
+        return int(body)
+    if tag == _T_STR:
+        return body.decode()
+    raise ValueError(tag)

@@ -1,0 +1,11 @@
+"""wal-exhaustive clean: a second replayer, qualified-name arms."""
+from . import wal as W
+
+
+def _apply_live(engine, rec):
+    if rec.kind == W.EDGES:
+        engine.apply_edge_delta(rec.a, rec.b)
+    elif rec.kind == W.LABELS:
+        engine.apply_label_delta(rec.a)
+    elif rec.kind == W.SNAPSHOT:
+        engine.compact()

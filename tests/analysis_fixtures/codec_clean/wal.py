@@ -1,0 +1,15 @@
+"""wal-exhaustive clean: every kind has a replay arm."""
+
+EDGES, LABELS, SNAPSHOT = 1, 2, 3
+_MARKERS = (SNAPSHOT,)
+
+
+def _replay(store, rec):
+    if rec.kind == EDGES:
+        store.apply_edges(rec.a, rec.b)
+    elif rec.kind == LABELS:
+        store.apply_labels(rec.a)
+    elif rec.kind == SNAPSHOT:
+        store.compact()
+    else:
+        raise ValueError(rec.kind)

@@ -1,0 +1,25 @@
+"""lock-discipline violations: unlocked touches of guarded state."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._mu = threading.Lock()
+        self.count = 0                   # guarded by: _mu
+        self.peak = 0                    # guarded by: _mu
+
+    def bump(self):
+        self.count += 1                  # VIOLATION: no lock held
+
+    def read(self):
+        return self.count                # VIOLATION: unlocked read
+
+    def deferred(self):
+        with self._mu:
+            # the closure may run after the lock is released, so the
+            # lexical `with` above must NOT cover it
+            return lambda: self.peak + 1   # VIOLATION: closure escape
+
+    def reasonless(self):
+        # repro: allow(lock-discipline)
+        return self.peak                 # VIOLATION: waiver w/o reason

@@ -1,0 +1,34 @@
+"""lock-discipline clean: every guarded touch locked, annotated, or
+carrying a justified waiver."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._mu = threading.Lock()
+        self.count = 0                   # guarded by: _mu
+        self.peak = 0                    # guarded by: _mu
+        self.limit = 10                  # not guarded: set once
+
+    def bump(self):
+        with self._mu:
+            self.count += 1
+            if self.count > self.peak:
+                self.peak = self.count
+
+    # holds: _mu — only called from bump-like locked paths
+    def _reset(self):
+        self.count = 0
+        self.peak = 0
+
+    def snapshot(self):
+        with self._mu, open("/dev/null") as f:   # multi-item with
+            f.read(0)
+            return (self.count, self.peak)
+
+    def racy_hint(self):
+        # repro: allow(lock-discipline) — monotone hint read; staleness is acceptable for display
+        return self.count
+
+    def unguarded(self):
+        return self.limit                # not annotated: no finding

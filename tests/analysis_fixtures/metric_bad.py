@@ -1,0 +1,10 @@
+"""metric-name violations: off-scheme literals and f-strings."""
+
+
+def emit(obs, who):
+    obs.counter("serving_requests")              # VIOLATION: no repro_
+    obs.gauge("repro_Serving_Depth", 3)          # VIOLATION: case
+    obs.observe("repro_latency", 0.1)            # VIOLATION: 2 segs
+    with obs.span("serving", metric="lat"):      # 2 VIOLATIONS
+        pass
+    obs.counter(f"{who}_requests_total")         # VIOLATION: f-string

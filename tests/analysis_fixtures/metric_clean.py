@@ -1,0 +1,13 @@
+"""metric-name clean: scheme-conforming names, checked f-prefix."""
+
+
+def emit(obs, component, name):
+    obs.counter("repro_serving_requests_total")
+    obs.gauge("repro_serving_queue_depth", 3)
+    obs.observe("repro_transport_client_seconds", 0.1)
+    obs.histogram("repro_wal_fsync_seconds", 0.2)
+    with obs.span("serving.rebuild",
+                  metric="repro_serving_rebuild_seconds"):
+        pass
+    obs.gauge(f"repro_{component}_health_state", 1)   # literal prefix
+    obs.counter(name)                    # fully dynamic: skipped

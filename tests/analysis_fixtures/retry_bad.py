@@ -1,0 +1,33 @@
+"""retry-safety violations: retried mutations and twin drift."""
+
+
+class Shard:
+    def build(self, graph, Y):
+        pass
+
+    def rows(self, nodes, *, norm=False):
+        return nodes
+
+
+def retried_mutation(client):
+    client.call("apply_delta", idempotent=True)      # VIOLATION
+
+
+def computed_flag(client, flag):
+    client.call("ping", idempotent=flag)             # VIOLATION
+
+
+def dynamic_method(client, name):
+    client.call(name, idempotent=True)               # VIOLATION
+
+
+# repro: twin-of Shard; extra: address
+class BadProxy:
+    def build(self, graph, Y, token):                # VIOLATION:
+        pass                                         # required extra
+
+    def rows(self, nodes):                           # VIOLATION:
+        return nodes                                 # drops norm=
+
+    def stats(self):                                 # VIOLATION:
+        return {}                                    # no counterpart

@@ -1,0 +1,31 @@
+"""retry-safety clean: allowlisted retries, compatible twin."""
+
+
+class Engine:
+    def embed(self, nodes, min_version=0):
+        return nodes
+
+    def status(self):
+        return {}
+
+
+def reads(client):
+    client.call("ping", idempotent=True)
+    client.call("status", idempotent=True)
+    client.call("apply_delta")           # mutation, not retried: fine
+    client.call("build", idempotent=False)
+
+
+# repro: twin-of Engine; extra: ping, address
+class GoodProxy:
+    def embed(self, nodes, *, min_version=0, timeout_s=None):
+        return nodes                     # optional extra kwarg: fine
+
+    def status(self):
+        return {}
+
+    def ping(self):                      # declared extra
+        return {}
+
+    def _call(self, method):             # private: not checked
+        return method

@@ -1,0 +1,46 @@
+"""tracer-safety violations: numpy, control flow, and closed-over
+mutation inside traced functions."""
+import functools
+
+import jax
+import numpy as np
+
+_cache = {}
+
+
+@jax.jit
+def bad_numpy(x, y):
+    return np.dot(x, y)                  # VIOLATION: numpy on tracers
+
+
+@jax.jit
+def bad_branch(x, thresh):
+    if thresh > 0:                       # VIOLATION: if on tracer
+        return x * 2
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def bad_loop(x, k, limit):
+    acc = x
+    while acc.sum() < limit:             # VIOLATION: while on derived
+        acc = acc * 2
+    return acc
+
+
+@jax.jit
+def bad_closure(x):
+    _cache["last"] = x                   # VIOLATION: closed-over store
+    return x
+
+
+def make_counter():
+    n = 0
+
+    @jax.jit
+    def bad_nonlocal(x):
+        nonlocal n                       # VIOLATION: nonlocal write
+        n += 1
+        return x
+
+    return bad_nonlocal

@@ -1,0 +1,42 @@
+"""tracer-safety clean: static args, structural tests, shape reads,
+pallas partial-bound statics — all legal under trace."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@functools.partial(jax.jit, static_argnames=("K", "laplacian"))
+def clean_static(w, K, laplacian, deg=None):
+    if laplacian:                        # static arg: fine
+        w = w * 2.0
+    if deg is None:                      # structural test: fine
+        deg = jnp.zeros((K,), jnp.float32)
+    n = w.shape[0]                       # shape read: fine
+    if n > 4:                            # shape-derived int: fine
+        w = w[:4]
+    return jnp.where(w > 0, w, deg[:1])
+
+
+def _kernel(x_ref, o_ref, *, tile_n):
+    o_ref[...] = x_ref[...] * tile_n     # ref stores are params: fine
+
+
+def run_pallas(x, tile_n):
+    return pl.pallas_call(
+        functools.partial(_kernel, tile_n=tile_n),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def eager_numpy(x):
+    import numpy as np
+    return np.asarray(x)                 # not jitted: fine
+
+
+@jax.jit
+def scan_body_closure(xs):
+    def body(carry, x):
+        carry = carry + x                # scan-local rebinding: fine
+        return carry, carry
+    return jax.lax.scan(body, jnp.float32(0.0), xs)

@@ -1,0 +1,182 @@
+"""The static-analysis suite (`repro.analysis`) — checker by checker.
+
+Each checker must (a) fire on every planted violation in its
+`tests/analysis_fixtures/` bad input, with the exact rule and line,
+and (b) stay silent on the clean counterpart.  The waiver machinery,
+the JSON/CLI surface, and the repo gate itself (`python -m
+repro.analysis src` exits 0) are covered here too.  Everything is
+stdlib-only and fast-lane: the suite never imports the code it
+analyzes, so none of these tests touch jax.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import Module, run_checks
+from repro.analysis.checkers import default_checkers
+from repro.analysis.lock_discipline import LockDiscipline
+from repro.analysis.metric_names import MetricNames
+from repro.analysis.retry_safety import RetrySafety
+from repro.analysis.tracer_safety import TracerSafety
+from repro.analysis.wal_exhaustive import WalExhaustive
+
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+REPO = Path(__file__).parent.parent
+
+
+def _hits(path, checker):
+    report = run_checks([str(path)], checkers=[checker])
+    return [(f.rule, f.line) for f in report.findings]
+
+
+# -- lock discipline -------------------------------------------------------
+
+def test_lock_discipline_fires_on_violations():
+    hits = _hits(FIXTURES / "lock_bad.py", LockDiscipline())
+    assert ("lock-discipline", 12) in hits    # unlocked write
+    assert ("lock-discipline", 15) in hits    # unlocked read
+    assert ("lock-discipline", 21) in hits    # closure escapes `with`
+    assert ("lock-discipline", 25) in hits    # reasonless waiver: kept
+    assert ("waiver", 24) in hits             # ...and flagged itself
+
+
+def test_lock_discipline_quiet_on_clean():
+    report = run_checks([str(FIXTURES / "lock_clean.py")],
+                        checkers=[LockDiscipline()])
+    assert report.findings == []
+    assert report.waived == 1                 # the justified waiver
+
+
+# -- retry safety / twins --------------------------------------------------
+
+def test_retry_safety_fires_on_violations():
+    hits = _hits(FIXTURES / "retry_bad.py", RetrySafety())
+    assert ("retry-safety", 13) in hits       # retried mutation
+    assert ("retry-safety", 17) in hits       # computed flag
+    assert ("retry-safety", 21) in hits       # dynamic method name
+    assert ("retry-safety", 26) in hits       # required proxy-only arg
+    assert ("retry-safety", 29) in hits       # dropped twin kwarg
+    assert ("retry-safety", 32) in hits       # no twin counterpart
+
+
+def test_retry_safety_quiet_on_clean():
+    assert _hits(FIXTURES / "retry_clean.py", RetrySafety()) == []
+
+
+def test_twin_check_skips_when_twin_absent():
+    mod = Module("proxy.py", (
+        "# repro: twin-of SomewhereElse\n"
+        "class P:\n"
+        "    def extra_method(self):\n"
+        "        return 1\n"))
+    assert list(RetrySafety().check([mod])) == []
+
+
+def test_allowlist_is_read_only_names():
+    from repro.analysis.retry_safety import READ_ONLY_RPC_METHODS
+    for mutation in ("build", "apply_delta", "update_index",
+                     "build_index", "__shutdown__"):
+        assert mutation not in READ_ONLY_RPC_METHODS
+
+
+# -- metric / span names ---------------------------------------------------
+
+def test_metric_names_fire_on_violations():
+    hits = _hits(FIXTURES / "metric_bad.py", MetricNames())
+    assert hits.count(("metric-name", 8)) == 2   # span name + metric=
+    for line in (5, 6, 7, 10):
+        assert ("metric-name", line) in hits
+    assert len(hits) == 6
+
+
+def test_metric_names_quiet_on_clean():
+    assert _hits(FIXTURES / "metric_clean.py", MetricNames()) == []
+
+
+# -- tracer safety ---------------------------------------------------------
+
+def test_tracer_safety_fires_on_violations():
+    hits = _hits(FIXTURES / "tracer_bad.py", TracerSafety())
+    assert ("tracer-safety", 13) in hits      # np on tracers
+    assert ("tracer-safety", 18) in hits      # if on tracer
+    assert ("tracer-safety", 26) in hits      # while on derived value
+    assert ("tracer-safety", 33) in hits      # closed-over store
+    assert ("tracer-safety", 42) in hits      # nonlocal write
+    assert len(hits) == 5
+
+
+def test_tracer_safety_quiet_on_clean():
+    assert _hits(FIXTURES / "tracer_clean.py", TracerSafety()) == []
+
+
+# -- WAL / codec exhaustiveness --------------------------------------------
+
+def test_wal_exhaustive_fires_on_violations():
+    report = run_checks([str(FIXTURES / "codec_bad")],
+                        checkers=[WalExhaustive()])
+    got = {(os.path.basename(f.path), f.line) for f in report.findings}
+    assert ("wal.py", 6) in got               # missing replay arm
+    assert ("framing.py", 3) in got           # tag never packed
+    assert ("framing.py", 4) in got           # tag never unpacked
+    assert ("legacy.py", 2) in got            # pickle import
+    assert len(report.findings) == 4
+
+
+def test_wal_exhaustive_quiet_on_clean():
+    report = run_checks([str(FIXTURES / "codec_clean")],
+                        checkers=[WalExhaustive()])
+    assert report.findings == []
+
+
+# -- framework: waivers, CLI, and the repo gate ----------------------------
+
+def test_waiver_requires_matching_rule():
+    mod_src = (
+        "import threading\n"
+        "class C:\n"
+        "    def __init__(self):\n"
+        "        self._mu = threading.Lock()\n"
+        "        self.x = 0  # guarded by: _mu\n"
+        "    def f(self):\n"
+        "        # repro: allow(metric-name) — wrong rule\n"
+        "        return self.x\n")
+    path = FIXTURES / "_tmp_wrong_rule.py"
+    path.write_text(mod_src)
+    try:
+        hits = _hits(path, LockDiscipline())
+        assert ("lock-discipline", 8) in hits    # waiver didn't apply
+    finally:
+        path.unlink()
+
+
+def test_default_suite_has_five_checkers():
+    names = {c.name for c in default_checkers()}
+    assert names == {"lock-discipline", "retry-safety", "metric-name",
+                     "tracer-safety", "wal-exhaustive"}
+
+
+def _run_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=str(REPO), env=env, capture_output=True, text=True,
+        timeout=120)
+
+
+def test_cli_json_reports_findings_and_exits_nonzero():
+    proc = _run_cli("--json", str(FIXTURES / "metric_bad.py"))
+    assert proc.returncode == 1
+    report = json.loads(proc.stdout)
+    assert report["ok"] is False
+    assert report["files"] == 1
+    assert {f["rule"] for f in report["findings"]} == {"metric-name"}
+
+
+def test_repo_tree_is_clean():
+    """THE gate: the shipped source passes its own analysis suite."""
+    proc = _run_cli("src")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout

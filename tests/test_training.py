@@ -121,7 +121,7 @@ class TestDataPipeline:
                 pairs.setdefault(int(x), []).append(int(y))
         # most-common-successor accuracy far above chance
         hits = tot = 0
-        for x, ys in pairs.items():
+        for ys in pairs.values():
             vals, counts = np.unique(ys, return_counts=True)
             hits += counts.max()
             tot += counts.sum()
