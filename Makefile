@@ -80,6 +80,9 @@ bench-encoder:
 bench-smoke:
 	$(PY) -m benchmarks.run --quick --only table1,fig4,kernels,encoder,serving,index
 	$(PY) -m benchmarks.obs_gate --quick
+	XLA_FLAGS=--xla_force_host_platform_device_count=1 \
+		$(PY) -m repro.launch.hillclimb --quick \
+		gee-scatter-tune gee-topk-tune
 
 # IVF index: QPS + recall@10 vs the exact scan at n in {1e5, 1e6}.
 bench-index:

@@ -71,6 +71,14 @@ def list_backends() -> list[str]:
     return sorted(_REGISTRY)
 
 
+def partition_backends() -> list[str]:
+    """Registered backends implementing the owned-rows accumulate path
+    (`EncoderConfig.row_partition`) — the suggestion list for the
+    plan-time rejection of a partition-unaware backend."""
+    return sorted(n for n, c in _REGISTRY.items()
+                  if c.supports_row_partition)
+
+
 class Backend:
     """One execution strategy: label-free `plan`, label-dependent `embed`."""
 
@@ -250,25 +258,58 @@ class PallasBackend(Backend):
     slots carry w = 0 and are no-ops for any labeling.  The packed
     buffers are the host half: a persistent-cache hit skips the sort in
     a fresh process too.
+
+    Under a row partition the contributions bucketed by owned
+    destination (`plan.owned_contributions`, destinations remapped to
+    [0, hi - lo)) feed the SAME destination packing over the local row
+    range, so sharded rebuilds get both the edge-parallel kernel and
+    the O(n/p) (hi - lo, K) accumulator; the packed blocks are the
+    persisted tier-2 artifact, keyed on the partition via the config
+    token like every other backend.
+
+    The kernel's compile/interpret mode resolves per platform at plan
+    finalize (`kernels.resolve_interpret`: compiled on TPU/GPU,
+    interpreter elsewhere unless the config forces a bool); the
+    resolved mode lands in plan.data, the embed info dict, and the
+    ``repro_kernels_pallas_interpret_mode`` gauge — it is per-process
+    runtime state, never persisted.
     """
+
+    supports_row_partition = True
+    #: v2: partitioned plans pack over local rows [0, hi - lo)
+    plan_version = 2
 
     def plan_host(self, graph, config, w_eff, *, mesh=None):
         from repro.kernels.ops import _round_up, pack_edges
-        u, v = np.asarray(graph.u), np.asarray(graph.v)
-        dst = np.concatenate([u, v])
-        src = np.concatenate([v, u])          # label donor
-        w2 = np.concatenate([w_eff, w_eff])
-        rows, srcb, wb, T = pack_edges(dst, src, w2, graph.n,
+        if config.row_partition is not None:
+            lo, hi = config.row_partition
+            dst, src, w2 = owned_contributions(graph, w_eff, lo, hi)
+            n_rows = hi - lo
+        else:
+            u, v = np.asarray(graph.u), np.asarray(graph.v)
+            dst = np.concatenate([u, v])
+            src = np.concatenate([v, u])          # label donor
+            w2 = np.concatenate([w_eff, w_eff])
+            n_rows = graph.n
+        rows, srcb, wb, T = pack_edges(dst, src, w2, n_rows,
                                        config.tile_n, config.edge_block)
         return {"rows": rows, "src": srcb, "w_packed": wb, "T": T,
                 "kdim": _round_up(config.K, 8)}
 
     def plan_finalize(self, p, graph, *, mesh=None):
+        from repro.kernels.gee_scatter import (interpret_mode_name,
+                                               resolve_interpret)
         h = p.host
+        interp = resolve_interpret(p.config.interpret)
         p.data = {"rows": jnp.asarray(h["rows"]),
                   "src": jnp.asarray(h["src"]),
                   "w": jnp.asarray(np.asarray(h["w_packed"], np.float32)),
-                  "T": int(h["T"]), "kdim": int(h["kdim"])}
+                  "T": int(h["T"]), "kdim": int(h["kdim"]),
+                  "interpret": interp}
+        if obs.enabled():
+            obs.gauge("repro_kernels_pallas_interpret_mode",
+                      1.0 if interp else 0.0,
+                      mode=interpret_mode_name(interp))
 
     def embed(self, plan, Yj, Wv):
         from repro.kernels.gee_scatter import gee_scatter_pallas
@@ -279,11 +320,11 @@ class PallasBackend(Backend):
         val = jnp.where(Ys >= 0, Wv[d["src"]] * d["w"], 0.0)
         Z = gee_scatter_pallas(d["rows"], cls, val, num_tiles=d["T"],
                                tile_n=cfg.tile_n, kdim=d["kdim"],
-                               interpret=cfg.interpret)
-        Z = Z[:plan.n, :cfg.K]
+                               interpret=d["interpret"])
+        Z = Z[:plan.n_local, :cfg.K]
         if obs.enabled():
             self._record_kernel(plan, Z, t0)
-        return Z, {}
+        return Z, {"interpret": d["interpret"]}
 
 
 @register_backend("streaming")

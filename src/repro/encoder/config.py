@@ -11,7 +11,7 @@ keyed on it.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 
 @dataclass(frozen=True)
@@ -43,7 +43,8 @@ class EncoderConfig:
                   global too.  The partition joins the plan-cache key
                   (tier 1 and tier 2), so a resharded deployment can
                   never hit a stale plan.  Supported by the numpy /
-                  xla / streaming backends.
+                  xla / streaming / pallas backends (the distributed
+                  collective modes shard internally instead).
 
     Backend tuning (never change Z, only speed/memory):
       backend     execution strategy by registry name, or "auto"
@@ -67,10 +68,12 @@ class EncoderConfig:
     # refinement
     refine_iters: int = 10
     kmeans_iters: int = 3
-    # pallas
+    # pallas: interpret is "auto" (compiled on TPU/GPU, interpreter
+    # elsewhere — resolved at plan time by kernels.resolve_interpret),
+    # or an explicit bool to force a mode
     tile_n: int = 256
     edge_block: int = 512
-    interpret: bool = True
+    interpret: Union[bool, str] = "auto"
     # streaming
     chunk_size: int = 1 << 20
     # distributed
@@ -81,6 +84,11 @@ class EncoderConfig:
             raise ValueError(f"K must be >= 1, got {self.K}")
         if self.chunk_size < 1:
             raise ValueError("chunk_size must be >= 1")
+        if not isinstance(self.interpret, bool) and \
+                self.interpret != "auto":
+            raise ValueError(
+                f"interpret must be True, False, or 'auto', got "
+                f"{self.interpret!r}")
         if self.row_partition is not None:
             try:
                 lo, hi = self.row_partition

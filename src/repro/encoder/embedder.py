@@ -136,10 +136,14 @@ class Embedder:
         rp = self.config.row_partition
         if rp is not None:
             if not backend.supports_row_partition:
+                from repro.encoder.backends import partition_backends
                 raise ValueError(
                     f"backend {backend.name!r} has no owned-rows "
-                    "accumulate path (row_partition); use one of the "
-                    "partition-aware backends (numpy, xla, streaming)")
+                    "accumulate path (row_partition) — only the "
+                    "distributed:* collective modes lack one (they "
+                    "shard internally across the device mesh instead); "
+                    "use one of the partition-aware backends: "
+                    f"{', '.join(partition_backends())}")
             if rp[1] > graph.n:
                 raise ValueError(
                     f"row_partition {rp} exceeds graph n={graph.n}")
@@ -290,6 +294,60 @@ class Embedder:
         self._deltas_applied += 1
         self._record_partial_fit(t0, delta.s)
         return self
+
+    def partial_fit_norm(self, delta: Graph, *, sign: float = 1.0
+                         ) -> jnp.ndarray:
+        """`partial_fit` fused with renormalization: fold the delta
+        into Z AND produce the row-normalized slice in one pallas pass
+        (`kernels.query_fused.gee_delta_renorm`) — the serving
+        partial_fit-then-query turnaround, where the normalized rows
+        are needed immediately and a separate normalize pass would
+        re-read all of Z from HBM.  Same exactness contract as
+        `partial_fit` (linear updates only); classes/values resolve on
+        the host from the fitted (labels_, Wv_) pair and pack by
+        destination tile like the fit-path kernel.  Returns Zn — the
+        unit-normalized fitted rows (the shard's query cache)."""
+        if self.Z_ is None:
+            raise NotFittedError("partial_fit_norm() before fit()")
+        if self.config.laplacian:
+            raise ValueError(
+                "partial_fit_norm is exact only for laplacian=False: "
+                "degree scaling makes Z nonlinear in the edge multiset "
+                "— refit on the updated graph instead")
+        if delta.n != self.n_:
+            raise ValueError(f"delta graph has n={delta.n}, fitted "
+                             f"n={self.n_}")
+        delta.validate()
+        from repro.kernels.ops import pack_edges
+        from repro.kernels.query_fused import gee_delta_renorm
+        t0 = obs.tick()
+        rp = self.config.row_partition
+        if delta.s == 0:
+            rows = src = np.zeros(0, np.int32)
+            w = np.zeros(0, np.float32)
+        elif rp is not None:
+            rows, src, w = owned_contributions(delta, delta.w, *rp)
+        else:
+            u, v = np.asarray(delta.u), np.asarray(delta.v)
+            rows = np.concatenate([u, v]).astype(np.int32)
+            src = np.concatenate([v, u]).astype(np.int32)
+            w = np.concatenate([delta.w, delta.w]).astype(np.float32)
+        Ys = self.labels_[src]
+        clsv = np.maximum(Ys, 0).astype(np.int32)
+        Wvh = np.asarray(self.Wv_)
+        val = np.where(Ys >= 0, Wvh[src] * w,
+                       np.float32(0)) * np.float32(sign)
+        n_local = int(self.Z_.shape[0])
+        rb, cb, vb, _ = pack_edges(rows, clsv, val.astype(np.float32),
+                                   n_local, self.config.tile_n,
+                                   self.config.edge_block)
+        self.Z_, Zn = gee_delta_renorm(
+            self.Z_, rb, cb, vb, tile_n=self.config.tile_n,
+            interpret=self.config.interpret)
+        if rows.shape[0]:
+            self._deltas_applied += 1
+        self._record_partial_fit(t0, delta.s)
+        return Zn
 
     def _record_partial_fit(self, t0: float, s: int) -> None:
         """Registry metrics for one applied delta (obs-on only: the

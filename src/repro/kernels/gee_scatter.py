@@ -26,6 +26,7 @@ made the destination local.
 from __future__ import annotations
 
 import functools
+from typing import Union
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +34,30 @@ from jax.experimental import pallas as pl
 
 TILE_N = 256          # Z rows per VMEM tile
 EDGE_BLOCK = 512      # edges per inner grid step
+
+#: platforms with a real pallas lowering — everywhere else the kernels
+#: run in the interpreter (correctness path, NOT kernel performance)
+COMPILED_PLATFORMS = ("tpu", "gpu")
+
+
+def resolve_interpret(interpret: Union[bool, str] = "auto") -> bool:
+    """Resolve an ``interpret`` knob to a concrete bool for pallas_call.
+
+    ``"auto"`` (the `EncoderConfig` default) compiles on TPU/GPU —
+    platforms where pallas has a native lowering — and falls back to
+    the interpreter elsewhere (CPU).  An explicit True/False is passed
+    through: True forces the interpreter (debugging), False forces
+    compilation (fails loudly where no lowering exists, which is the
+    point — a silent interpreter fallback is how a "fast kernel" path
+    ends up measured in pure Python)."""
+    if interpret == "auto" or interpret is None:
+        return jax.default_backend() not in COMPILED_PLATFORMS
+    return bool(interpret)
+
+
+def interpret_mode_name(interpret: bool) -> str:
+    """Human/metric label for a resolved interpret flag."""
+    return "interpret" if interpret else "compiled"
 
 
 def _kernel(rows_ref, cls_ref, val_ref, z_ref, *, tile_n: int, kdim: int):
@@ -57,10 +82,11 @@ def _kernel(rows_ref, cls_ref, val_ref, z_ref, *, tile_n: int, kdim: int):
 
 
 def gee_scatter_pallas(rows, cls, val, *, num_tiles: int, tile_n: int,
-                       kdim: int, interpret: bool = True):
+                       kdim: int, interpret: Union[bool, str] = "auto"):
     """rows/cls/val: (T, BPT, EB) packed edge blocks (see ops.pack_edges).
 
     Returns Z (num_tiles * tile_n, kdim) float32."""
+    interpret = resolve_interpret(interpret)
     T, BPT, EB = rows.shape
     assert T == num_tiles
     grid = (T, BPT)

@@ -9,6 +9,7 @@ performance-irrelevant.
 """
 from __future__ import annotations
 
+from typing import Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -55,7 +56,8 @@ def pack_edges(dst, cls, val, n: int, tile_n: int = TILE_N,
 
 
 def gee_pallas(u, v, w, Y, *, K: int, n: int, tile_n: int = TILE_N,
-               edge_block: int = EDGE_BLOCK, interpret: bool = True,
+               edge_block: int = EDGE_BLOCK,
+               interpret: Union[bool, str] = "auto",
                pad_k: int = 8) -> jnp.ndarray:
     """GEE via the Pallas scatter kernel. Returns Z (n, K) float32."""
     Wv = make_w(jnp.asarray(Y), K)

@@ -1,0 +1,197 @@
+"""Fused query-side Pallas kernels for the serving read/write hot path.
+
+Two kernels, both blocked over the shard's owned slice:
+
+``topk_fused``
+    normalize + cosine score + running top-k merge in ONE pallas_call,
+    replacing the separate ``normalize_rows`` pass and per-block jitted
+    ``_topk_block`` calls of `repro.serving.queries`.  The grid walks
+    candidate blocks in ascending-global-id order while the running
+    (vals, idxs) top-k stays resident in the revisited output block, so
+    the whole scan is a single dispatch with no intermediate Zn
+    materialization (``normalize=True`` additionally emits the
+    normalized slice so a caller can populate its Zn cache from the
+    same pass).
+
+``gee_delta_renorm``
+    delta-apply + renormalize in ONE pallas_call for the
+    partial_fit-then-query serving turnaround: the grid is the same
+    destination-tiled (T, BPT) layout as `gee_scatter`, each Z tile is
+    loaded once, accumulated over its packed contribution blocks, and
+    row-normalized on the final visit — Z never makes a second
+    HBM round trip between the write and the read path.
+
+**Bit-equality contract.**  ``topk_fused`` reproduces the
+`repro.serving.queries` blocked scan bit-exactly (tested with
+``np.array_equal``, not allclose): per-block math is the identical
+``q @ block.T`` / mask / concat-running-BEFORE-block / ``lax.top_k``
+sequence, blocks are presented in ascending-global-id order, and
+normalization reduces over exactly K columns (the candidate block's
+second dim is K, never the lane-padded kdim), so score ties resolve to
+the ascending global id exactly as the unfused path does.
+
+``lax.top_k`` inside the kernel body relies on the interpreter (CPU)
+or Mosaic's top_k support (TPU); ``interpret="auto"`` resolves per
+platform like every other kernel here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gee_scatter import resolve_interpret
+
+EPS = 1e-9      # normalize_rows' clamp — must match queries.normalize_rows
+
+
+def _normalize(z, eps):
+    return z / jnp.maximum(jnp.linalg.norm(z, axis=-1, keepdims=True), eps)
+
+
+def _topk_kernel(z_ref, q_ref, qn_ref, vals_ref, idxs_ref, *rest,
+                 bucket: int, k: int, m: int, row_offset: int,
+                 exclude_self: bool, normalize: bool, eps: float):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        vals_ref[...] = jnp.full(vals_ref.shape, -jnp.inf, jnp.float32)
+        idxs_ref[...] = jnp.full(idxs_ref.shape, -1, jnp.int32)
+
+    z = z_ref[...]                                        # (bucket, K)
+    if normalize:
+        z = _normalize(z, eps)
+        rest[0][...] = z                                  # zn_ref
+    q = q_ref[...]                                        # (nq, K)
+    qnodes = qn_ref[:, 0]                                 # (nq,)
+    local = b * bucket + jax.lax.broadcasted_iota(jnp.int32, (bucket,), 0)
+    gidx = jnp.where(local < m, row_offset + local, -1)   # -1: padding
+    scores = q @ z.T                                      # (nq, bucket)
+    mask = gidx[None, :] < 0
+    if exclude_self:
+        mask = mask | (gidx[None, :] == qnodes[:, None])
+    scores = jnp.where(mask, -jnp.inf, scores)
+    # running candidates BEFORE the block: ties resolve to the lower
+    # (earlier, ascending) global id via lax.top_k's position rule
+    cat_v = jnp.concatenate([vals_ref[...], scores], 1)
+    cat_i = jnp.concatenate(
+        [idxs_ref[...], jnp.broadcast_to(gidx, scores.shape)], 1)
+    v, sel = jax.lax.top_k(cat_v, k)
+    vals_ref[...] = v
+    idxs_ref[...] = jnp.take_along_axis(cat_i, sel, 1)
+
+
+def topk_fused(Z_rows, q, qnodes, *, k: int, bucket: int,
+               row_offset: int = 0, exclude_self: bool = True,
+               normalize: bool = False, eps: float = EPS,
+               interpret: Union[bool, str] = "auto"):
+    """Blocked normalize+cosine+top-k in one pallas_call.
+
+    Z_rows (m, K): candidate rows at global ids [row_offset,
+    row_offset + m) — RAW when normalize=True, unit-norm otherwise.
+    q (nq, K) unit-norm queries; qnodes (nq,) global ids for
+    self-exclusion.  `bucket` is the static block size (the caller owns
+    the blocking policy — `queries._topk_blocked`'s bucket rule).
+
+    Returns (vals (nq, k) f32, idxs (nq, k) i32) device arrays — plus
+    Zn (m, K) when normalize=True.  Unfilled slots are NOT clamped here
+    (the queries-layer wrapper applies the shared isfinite -> -1 pass).
+    """
+    interpret = resolve_interpret(interpret)
+    m, K = Z_rows.shape
+    nq = q.shape[0]
+    mp = max(((max(m, 1) + bucket - 1) // bucket) * bucket, bucket)
+    Zp = jnp.asarray(Z_rows)
+    if mp != m:
+        Zp = jnp.pad(Zp, ((0, mp - m), (0, 0)))
+    nb = mp // bucket
+    qn = jnp.asarray(qnodes, jnp.int32).reshape(nq, 1)
+    z_spec = pl.BlockSpec((bucket, K), lambda b: (b, 0))
+    q_spec = pl.BlockSpec((nq, K), lambda b: (0, 0))
+    qn_spec = pl.BlockSpec((nq, 1), lambda b: (0, 0))
+    run_spec = pl.BlockSpec((nq, k), lambda b: (0, 0))    # revisited
+    out_specs = [run_spec, run_spec]
+    out_shape = [jax.ShapeDtypeStruct((nq, k), jnp.float32),
+                 jax.ShapeDtypeStruct((nq, k), jnp.int32)]
+    if normalize:
+        out_specs.append(z_spec)
+        out_shape.append(jax.ShapeDtypeStruct((mp, K), jnp.float32))
+    out = pl.pallas_call(
+        functools.partial(_topk_kernel, bucket=bucket, k=k, m=m,
+                          row_offset=row_offset,
+                          exclude_self=exclude_self,
+                          normalize=normalize, eps=eps),
+        grid=(nb,),
+        in_specs=[z_spec, q_spec, qn_spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(Zp, jnp.asarray(q), qn)
+    if normalize:
+        vals, idxs, zn = out
+        return vals, idxs, zn[:m]
+    vals, idxs = out
+    return vals, idxs
+
+
+def _delta_kernel(rows_ref, cls_ref, val_ref, z_ref, znew_ref, zn_ref, *,
+                  tile_n: int, kdim: int, bpt: int, eps: float):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        znew_ref[...] = z_ref[...]
+
+    rows = rows_ref[0, 0, :]                              # (EB,) int32
+    cls = cls_ref[0, 0, :]
+    val = val_ref[0, 0, :].astype(jnp.float32)
+    eb = rows.shape[0]
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (eb, tile_n), 1)
+    cls_iota = jax.lax.broadcasted_iota(jnp.int32, (eb, kdim), 1)
+    R = (rows[:, None] == row_iota).astype(jnp.float32)
+    C = (cls[:, None] == cls_iota).astype(jnp.float32) * val[:, None]
+    znew_ref[...] += jax.lax.dot_general(
+        R, C, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(b == bpt - 1)
+    def _renorm():
+        zn_ref[...] = _normalize(znew_ref[...], eps)
+
+
+def gee_delta_renorm(Z, rows, cls, val, *, tile_n: int, eps: float = EPS,
+                     interpret: Union[bool, str] = "auto"):
+    """Fold packed delta contributions into Z and renormalize — one
+    pallas_call, one Z round trip.
+
+    Z (n_local, K) float32; rows/cls/val (T, BPT, EB) packed blocks
+    over local destination rows (see ops.pack_edges — padded slots
+    carry val = 0 and are no-ops).  The second dim stays K (no lane
+    padding) so the row norm reduces over exactly the K real columns,
+    matching queries.normalize_rows bit-for-bit.
+
+    Returns (Z_new (n_local, K), Zn (n_local, K)) device arrays.
+    """
+    interpret = resolve_interpret(interpret)
+    T, BPT, EB = rows.shape
+    n_local, K = Z.shape
+    Zp = jnp.asarray(Z, jnp.float32)
+    if T * tile_n != n_local:
+        Zp = jnp.pad(Zp, ((0, T * tile_n - n_local), (0, 0)))
+    eb_spec = pl.BlockSpec((1, 1, EB), lambda t, b: (t, b, 0))
+    z_spec = pl.BlockSpec((tile_n, K), lambda t, b: (t, 0))
+    znew, zn = pl.pallas_call(
+        functools.partial(_delta_kernel, tile_n=tile_n, kdim=K,
+                          bpt=BPT, eps=eps),
+        grid=(T, BPT),
+        in_specs=[eb_spec, eb_spec, eb_spec, z_spec],
+        out_specs=[z_spec, z_spec],
+        out_shape=[jax.ShapeDtypeStruct((T * tile_n, K), jnp.float32),
+                   jax.ShapeDtypeStruct((T * tile_n, K), jnp.float32)],
+        interpret=interpret,
+    )(jnp.asarray(rows), jnp.asarray(cls), jnp.asarray(val), Zp)
+    return znew[:n_local], zn[:n_local]

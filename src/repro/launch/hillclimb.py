@@ -70,13 +70,44 @@ VARIANTS = {
     "gee-a2a": dict(kind="gee", mode="a2a"),
     "gee-rs": dict(kind="gee", mode="reduce_scatter"),
     "gee-repl": dict(kind="gee", mode="replicated"),
+    # --- kernel-geometry autotune (repro.launch.autotune): coordinate
+    # descent over TILE_N/EDGE_BLOCK (scatter) and block_rows (fused
+    # top-k), reporting achieved-vs-roofline HBM bandwidth.  Run with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=1 on CPU (this
+    # module's 512-device default exists for the SPMD dry runs and
+    # only slows single-kernel timing).
+    "gee-scatter-tune": dict(kind="kernel", fn="scatter"),
+    "gee-topk-tune": dict(kind="kernel", fn="topk"),
 }
+
+#: --quick workload shrink for the kernel tuners (bench-smoke lane:
+#: exercise the whole descent + bandwidth report in seconds)
+_KERNEL_QUICK = {
+    "scatter": dict(n=1_000, s=8_000, K=8,
+                    space={"tile_n": (64, 128),
+                           "edge_block": (128, 256)}, iters=1),
+    "topk": dict(m=2_000, K=8, nq=16, k=5,
+                 space={"block_rows": (256, 1024)}, iters=1),
+}
+
+
+def _run_kernel_tune(fn: str, quick: bool) -> None:
+    from repro.launch.autotune import tune_scatter, tune_topk
+    tuner = {"scatter": tune_scatter, "topk": tune_topk}[fn]
+    kw = _KERNEL_QUICK[fn] if quick else {}
+    out = tuner(**kw)
+    print(f"best[{fn}]: {out['best']}  {out['seconds'] * 1e3:.2f} ms  "
+          f"{out['achieved_gbps']:.2f} GB/s "
+          f"({out['roofline_frac'] * 100:.2f}% roofline, "
+          f"{out['mode']} mode)")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("variant", nargs="*", help=list(VARIANTS))
     ap.add_argument("--list", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny kernel-tune workloads (bench-smoke lane)")
     args = ap.parse_args()
     if args.list or not args.variant:
         for k in VARIANTS:
@@ -86,6 +117,8 @@ def main():
         v = VARIANTS[name]
         if v["kind"] == "gee":
             run_gee(mode=v["mode"])
+        elif v["kind"] == "kernel":
+            _run_kernel_tune(v["fn"], args.quick)
         else:
             run_cell(v["arch"], v["shape"], **v["kw"])
 

@@ -50,6 +50,7 @@ current Z.
 from __future__ import annotations
 
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -124,6 +125,34 @@ def _topk_block(vals, idxs, q, block, gidx, qnodes, *,
     return v, jnp.take_along_axis(cat_i, sel, 1)
 
 
+#: reusable per-thread host buffer for the blocked scan's padded tail
+#: block ids — the tail is rebuilt every scan but its shape recurs, so
+#: the scan fills one buffer in place instead of allocating a fresh
+#: np.concatenate result per call (the jnp conversion at the call site
+#: copies, so reuse can never alias a pending device computation)
+_TAIL = threading.local()
+
+
+def _padded_tail(gidx: np.ndarray, bucket: int) -> np.ndarray:
+    buf = getattr(_TAIL, "buf", None)
+    if buf is None or buf.shape[0] != bucket:
+        buf = np.empty(bucket, np.int32)
+        _TAIL.buf = buf
+    t = gidx.shape[0]
+    buf[:t] = gidx
+    buf[t:] = -1
+    return buf
+
+
+def _bucket_rows(m: int, block_rows: int) -> int:
+    """The blocked scan's static block size: single-block inputs pad to
+    a power-of-two bucket (one compile per bucket for the IVF path's
+    varying cell sizes); multi-block scans use the fixed block shape
+    and pad only the tail."""
+    return block_rows if m > block_rows else \
+        min(block_rows, _pow2(max(m, 1)))
+
+
 def _topk_blocked(Zn_rows, ids, q, qnodes, *, k: int, block_rows: int,
                   exclude_self: bool):
     """Shared blocked scan: score `q` against candidate rows carrying
@@ -133,20 +162,16 @@ def _topk_blocked(Zn_rows, ids, q, qnodes, *, k: int, block_rows: int,
     nq = q.shape[0]
     vals = jnp.full((nq, k), -jnp.inf, Zn_rows.dtype)
     idxs = jnp.full((nq, k), -1, jnp.int32)
-    # single-block inputs pad to a power-of-two bucket (one compile per
-    # bucket for the IVF path's varying cell sizes); multi-block scans
-    # pad only the tail to the fixed block shape
-    bucket = block_rows if m > block_rows else \
-        min(block_rows, _pow2(max(m, 1)))
+    bucket = _bucket_rows(m, block_rows)
     for base in range(0, max(m, 1), bucket):
         block = Zn_rows[base:min(base + bucket, m)]
         gidx = ids[base:min(base + bucket, m)]
         if block.shape[0] < bucket:
-            pad = bucket - block.shape[0]
-            block = jnp.pad(block, ((0, pad), (0, 0)))
-            gidx = np.concatenate([gidx, np.full(pad, -1, np.int32)])
+            block = jnp.pad(block, ((0, bucket - block.shape[0]),
+                                    (0, 0)))
+            gidx = _padded_tail(gidx, bucket)
         vals, idxs = _topk_block(vals, idxs, q, block,
-                                 jnp.asarray(gidx), qnodes,
+                                 jnp.array(gidx), qnodes,
                                  exclude_self=exclude_self, k=k)
     # entries never filled (k > candidate count) keep idx -1 / -inf
     valid = jnp.isfinite(vals)
@@ -159,6 +184,17 @@ def _pow2(size: int) -> int:
     while b < size:
         b <<= 1
     return b
+
+
+@functools.lru_cache(maxsize=64)
+def _id_ramp(row_offset: int, m: int) -> np.ndarray:
+    """Cached global-id ramp [row_offset, row_offset + m) — every query
+    against a shard's slice needs the same O(n/p) ramp, so it is built
+    once per (row_offset, m) instead of per call.  Read-only: callers
+    share the cached array."""
+    ids = (row_offset + np.arange(m)).astype(np.int32)
+    ids.setflags(write=False)
+    return ids
 
 
 def topk_cosine_q(Zn_rows, q, qnodes, *, k: int = 10,
@@ -178,10 +214,56 @@ def topk_cosine_q(Zn_rows, q, qnodes, *, k: int = 10,
     idx -1 / score -inf.  Returns (indices (q, k) int32,
     scores (q, k) float32) as numpy."""
     m = Zn_rows.shape[0]
-    ids = (row_offset + np.arange(m)).astype(np.int32)
+    ids = _id_ramp(int(row_offset), int(m))
     return _topk_blocked(Zn_rows, ids, q, qnodes, k=k,
                          block_rows=block_rows,
                          exclude_self=exclude_self)
+
+
+def _fused_clamp(vals, idxs):
+    """Shared unfilled-slot clamp (k > candidate count keeps
+    idx -1 / -inf), identical to the blocked scan's post-pass."""
+    valid = jnp.isfinite(vals)
+    return np.asarray(jnp.where(valid, idxs, -1)), np.asarray(vals)
+
+
+def topk_cosine_fused(Zn_rows, q, qnodes, *, k: int = 10,
+                      block_rows: int = 1 << 14,
+                      exclude_self: bool = True, row_offset: int = 0):
+    """`topk_cosine_q` as ONE fused pallas scan
+    (`kernels.query_fused.topk_fused`): same blocking policy, same
+    tie-breaking contract, bit-identical (idx, vals) — but the whole
+    blocked merge is a single dispatch with the running top-k resident
+    on-chip.  Candidate rows must be unit-norm (a shard's cached Zn);
+    use `topk_cosine_fused_norm` on raw rows."""
+    from repro.kernels.query_fused import topk_fused
+    m = Zn_rows.shape[0]
+    vals, idxs = topk_fused(
+        Zn_rows, q, qnodes, k=k, bucket=_bucket_rows(m, block_rows),
+        row_offset=int(row_offset), exclude_self=exclude_self,
+        normalize=False)
+    return _fused_clamp(vals, idxs)
+
+
+def topk_cosine_fused_norm(Z_rows, q, qnodes, *, k: int = 10,
+                           block_rows: int = 1 << 14,
+                           exclude_self: bool = True,
+                           row_offset: int = 0):
+    """Fused normalize+cosine+top-k over RAW candidate rows — the cold
+    path of a pallas shard, where Zn has not been materialized yet: the
+    kernel normalizes each block in-flight and emits the normalized
+    slice alongside the answer, so one pass over Z yields both the
+    query result and the shard's Zn cache.  Returns (idx, vals, Zn);
+    (idx, vals) are bit-identical to
+    ``topk_cosine_q(normalize_rows(Z_rows), ...)``."""
+    from repro.kernels.query_fused import topk_fused
+    m = Z_rows.shape[0]
+    vals, idxs, Zn = topk_fused(
+        Z_rows, q, qnodes, k=k, bucket=_bucket_rows(m, block_rows),
+        row_offset=int(row_offset), exclude_self=exclude_self,
+        normalize=True)
+    idx, v = _fused_clamp(vals, idxs)
+    return idx, v, Zn
 
 
 def topk_cosine_ids(Zn_rows, ids, q, qnodes, *, k: int = 10,

@@ -59,6 +59,12 @@ class EmbeddingShard:
                           row_partition=((self.lo, self.hi)
                                          if self.owned_only else None)),
             backend=backend, plan_cache=plan_cache)
+        #: pallas shards serve queries through the fused
+        #: normalize+cosine+top-k kernel and fold deltas through the
+        #: fused apply+renormalize kernel (same blocking policy and
+        #: tie contract — answers are bit-identical to the jitted
+        #: blocked scan, conformance-tested)
+        self._fused = (backend == "pallas")
         self._Zn: Optional[jnp.ndarray] = None
         #: optional IVF index over the owned slice (engine-managed:
         #: the engine owns the shared quantizer centroids and the
@@ -84,10 +90,16 @@ class EmbeddingShard:
     def apply_delta(self, sub: Graph) -> None:
         """Fold a routed edge sub-batch into Z (weights sign-folded
         upstream; O(batch), exact by linearity).  In owned-rows mode
-        the Embedder buckets the batch by owned destination itself."""
+        the Embedder buckets the batch by owned destination itself.
+        Pallas shards use the fused apply+renormalize kernel, so the
+        Zn cache is REFILLED by the same pass instead of invalidated —
+        the partial_fit-then-query turnaround never re-reads Z."""
         if sub.s:
-            self.embedder.partial_fit(sub)
-            self._Zn = None
+            if self._fused:
+                self._Zn = self.embedder.partial_fit_norm(sub)
+            else:
+                self.embedder.partial_fit(sub)
+                self._Zn = None
 
     # -- read path (everything leaves in global coordinates) ---------------
 
@@ -141,7 +153,23 @@ class EmbeddingShard:
 
     def topk_candidates(self, q, qnodes, *, k: int, block_rows: int):
         """This shard's top-k candidates for unit-norm query vectors
-        `q` — global-id-stamped, ready for `queries.merge_topk`."""
+        `q` — global-id-stamped, ready for `queries.merge_topk`.
+
+        Pallas shards answer through the fused kernel: cold (no Zn
+        cached) the kernel normalizes in-flight and its normalized
+        slice output becomes the cache; warm it scans the cached Zn.
+        Either way the (idx, score) answer is bit-identical to the
+        jitted blocked scan."""
+        if self._fused:
+            if self._Zn is None:
+                idx, vals, Zn = Q.topk_cosine_fused_norm(
+                    self.Z_owned, q, qnodes, k=k, block_rows=block_rows,
+                    row_offset=self.lo)
+                self._Zn = Zn
+                return idx, vals
+            return Q.topk_cosine_fused(self._Zn, q, qnodes, k=k,
+                                       block_rows=block_rows,
+                                       row_offset=self.lo)
         return Q.topk_cosine_q(self.normalized(), q, qnodes, k=k,
                                block_rows=block_rows, row_offset=self.lo)
 

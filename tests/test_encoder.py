@@ -271,7 +271,7 @@ class TestOwnedRows:
     and the slices concatenate to the unsharded Z — for full-graph
     input AND for the routed sub-multiset a serving shard receives."""
 
-    OWNED_BACKENDS = ["numpy", "xla", "streaming"]
+    OWNED_BACKENDS = ["numpy", "xla", "streaming", "pallas"]
 
     @pytest.mark.parametrize("backend", OWNED_BACKENDS)
     def test_owned_slices_concat_to_full_z(self, backend):
@@ -345,11 +345,17 @@ class TestOwnedRows:
 
     def test_unsupported_backends_and_configs_rejected(self):
         g, Y = _cases()["weighted_directed"]
-        for backend in ("pallas", "distributed:ring"):
-            emb = Embedder(EncoderConfig(K=5, row_partition=(0, 10),
-                                         **CFG), backend=backend)
-            with pytest.raises(ValueError, match="owned-rows"):
-                emb.plan(g)
+        # only the distributed collective modes lack the owned-rows
+        # path; the rejection must name the offender AND the
+        # partition-aware alternatives
+        emb = Embedder(EncoderConfig(K=5, row_partition=(0, 10),
+                                     **CFG), backend="distributed:ring")
+        with pytest.raises(ValueError, match="owned-rows") as ei:
+            emb.plan(g)
+        msg = str(ei.value)
+        assert "distributed:ring" in msg
+        for name in ("numpy", "xla", "streaming", "pallas"):
+            assert name in msg
         with pytest.raises(ValueError, match="row_partition"):
             EncoderConfig(K=5, row_partition=(10, 10))
         with pytest.raises(ValueError, match="row_partition"):
